@@ -1,0 +1,38 @@
+"""Paper Fig. 10 / 15 — FFT pruning + truncation + zero-padding vs the
+PyTorch-style staged baseline. derived = measured speedup and modeled HBM
+traffic ratio."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import pipelines as pl
+from benchmarks.common import row, time_fn
+
+
+def run(quick: bool = False):
+    print("# bench_fft_opt (paper Fig.10/15): name,us_per_call,derived")
+    rng = np.random.default_rng(0)
+    n = 256
+    cases = [(16, 1024), (32, 1024), (64, 1024), (128, 1024),
+             (32, 4096), (32, 16384)]
+    if quick:
+        cases = cases[:2]
+    for h, bs in cases:
+        for k in (n // 8, n // 4):  # 25% and 50% of N/2
+            o = h
+            x = jnp.asarray(rng.normal(size=(bs // h, h, n)), jnp.float32)
+            wr = jnp.asarray(rng.normal(size=(o, h)) / h, jnp.float32)
+            wi = jnp.asarray(rng.normal(size=(o, h)) / h, jnp.float32)
+            t_base = time_fn(pl.baseline_staged, x, wr, wi, k)
+            t_opt = time_fn(pl.fft_opt, x, wr, wi, k)
+            b = x.shape[0]
+            traffic = (pl.traffic_bytes(b, h, o, n, k, "baseline")
+                       / pl.traffic_bytes(b, h, o, n, k, "fft_opt"))
+            row(f"fft_opt_K{h}_BS{bs}_k{k}", t_opt,
+                f"speedup={t_base / t_opt:.2f}x traffic_ratio={traffic:.2f}")
+
+
+if __name__ == "__main__":
+    run()

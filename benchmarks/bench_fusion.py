@@ -1,0 +1,44 @@
+"""Paper Figs. 11-13 / 16-18 — progressive kernel fusion:
+FFT+CGEMM (B), CGEMM+iFFT (C), fully fused FFT-CGEMM-iFFT (D).
+
+derived = speedup over the staged baseline (A-level FFT-optimized pipeline
+is also printed for reference) and modeled HBM traffic ratios."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import pipelines as pl
+from benchmarks.common import row, time_fn
+
+PIPES = [("fft_opt", pl.fft_opt), ("fused_fgemm", pl.fused_fgemm),
+         ("fused_gemmi", pl.fused_gemmi), ("fused_full", pl.fused_full)]
+
+
+def run(quick: bool = False):
+    print("# bench_fusion (paper Fig.11-13/16-18): name,us_per_call,derived")
+    rng = np.random.default_rng(0)
+    n = 256
+    cases = [(32, 2048), (64, 2048), (128, 2048)]
+    if quick:
+        cases = cases[:1]
+    for h, bs in cases:
+        k = n // 4
+        o = h
+        b = bs // h
+        x = jnp.asarray(rng.normal(size=(b, h, n)), jnp.float32)
+        wr = jnp.asarray(rng.normal(size=(o, h)) / h, jnp.float32)
+        wi = jnp.asarray(rng.normal(size=(o, h)) / h, jnp.float32)
+        t_base = time_fn(pl.baseline_staged, x, wr, wi, k)
+        for name, fn in PIPES:
+            t = time_fn(fn, x, wr, wi, k)
+            traffic = (pl.traffic_bytes(b, h, o, n, k, "baseline")
+                       / pl.traffic_bytes(b, h, o, n, k,
+                                          name if name != "fft_opt"
+                                          else "fft_opt"))
+            row(f"{name}_K{h}_BS{bs}", t,
+                f"speedup={t_base / t:.2f}x traffic_ratio={traffic:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 5 — FFT butterfly pruning op counts, plus the TPU decision:
+pruned-FFT (VPU) vs truncated-DFT matmul (MXU) effective cost.
+
+derived column: kept-op fraction (paper claims 37.5% @ 25% trunc, 75% @ 50%
+on the 4-point example; 25%-67.5% compute savings overall)."""
+from __future__ import annotations
+
+from repro.core import spectral as sp
+from repro.roofline import hw
+
+from benchmarks.common import row
+
+MXU_VPU_RATIO = 25.0  # ~197 TFLOP/s MXU vs ~8 TFLOP/s VPU per chip
+
+
+def run():
+    print("# bench_prune (paper Fig.5): name,us_per_call,derived")
+    for n, k in [(4, 1), (4, 2), (128, 32), (128, 64), (256, 64),
+                 (256, 128), (512, 128)]:
+        kept = sp.pruned_fft_ops(n, k) / sp.fft_ops(n)
+        row(f"prune_ops_n{n}_k{k}", 0.0, f"kept_frac={kept:.4f}")
+    # effective-time comparison of the two truncated-transform strategies
+    for n, k in [(128, 32), (256, 64), (256, 128), (1024, 256),
+                 (4096, 1024)]:
+        t_fft = sp.pruned_fft_flops(n, k)  # VPU ops
+        t_dft = sp.truncated_dft_matmul_flops(n, k, False) / MXU_VPU_RATIO
+        row(f"prune_vs_dftmm_n{n}_k{k}", 0.0,
+            f"dft_matmul_speedup={t_fft / t_dft:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

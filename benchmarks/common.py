@@ -1,0 +1,33 @@
+"""Benchmark harness utilities.
+
+Wall-times are CPU XLA timings (both sides of every comparison run on the
+same backend, so RATIOS are meaningful even though absolute numbers are not
+TPU numbers). Each row prints ``name,us_per_call,derived`` where `derived`
+carries the analytically-derived quantity the paper's figure reports
+(speedup, bytes ratio, op ratio, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call in microseconds (blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

@@ -1,0 +1,142 @@
+"""The measured pipelines for the fusion benchmark family.
+
+baseline_staged  — "PyTorch/cuFFT+cuBLAS" analogue: every stage is its own
+                   jit'd call with a device round-trip between stages
+                   (full-spectrum FFT, separate truncation copy, CGEMM,
+                   separate zero-pad copy, iFFT).
+fft_opt          — TurboFNO's FFT-level optimizations only (built-in
+                   truncation/zero-pad/pruning via the truncated-DFT
+                   formulation) but stages still separate (paper Fig.10/15).
+fused_fgemm      — FFT fused into the CGEMM (one jit), iFFT separate
+                   (paper Fig.11/16).
+fused_gemmi      — FFT separate, CGEMM+iFFT fused (paper Fig.12/17).
+fused_full       — single fully fused program (paper Fig.13/18); the
+                   `pallas` flavor runs the actual fused kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spectral as sp
+from repro.kernels import ops
+
+
+# -- individual stages (jit'd separately => materialized between) -----------
+@jax.jit
+def _full_rfft(x):
+    xf = jnp.fft.rfft(x, axis=-1)
+    return xf.real, xf.imag
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _truncate(xr, xi, k):
+    return xr[..., :k].copy(), xi[..., :k].copy()
+
+
+@jax.jit
+def _cgemm(wr, wi, xr, xi):
+    yr = jnp.einsum("oh,bhm->bom", wr, xr) - jnp.einsum("oh,bhm->bom", wi, xi)
+    yi = jnp.einsum("oh,bhm->bom", wr, xi) + jnp.einsum("oh,bhm->bom", wi, xr)
+    return yr, yi
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _zero_pad(yr, yi, n):
+    pad = [(0, 0), (0, 0), (0, n // 2 + 1 - yr.shape[-1])]
+    return jnp.pad(yr, pad), jnp.pad(yi, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _irfft(yr, yi, n):
+    return jnp.fft.irfft(yr + 1j * yi, n=n, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _trunc_rdft(x, k):
+    return sp.truncated_rdft(x, k)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _pad_irdft(yr, yi, n):
+    return sp.padded_irdft(yr, yi, n)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _fused_dft_gemm(x, wr, wi, k):
+    xr, xi = sp.truncated_rdft(x, k)
+    yr = jnp.einsum("oh,bhm->bom", wr, xr) - jnp.einsum("oh,bhm->bom", wi, xi)
+    yi = jnp.einsum("oh,bhm->bom", wr, xi) + jnp.einsum("oh,bhm->bom", wi, xr)
+    return yr, yi
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _fused_gemm_idft(xr, xi, wr, wi, n):
+    yr = jnp.einsum("oh,bhm->bom", wr, xr) - jnp.einsum("oh,bhm->bom", wi, xi)
+    yi = jnp.einsum("oh,bhm->bom", wr, xi) + jnp.einsum("oh,bhm->bom", wi, xr)
+    return sp.padded_irdft(yr, yi, n)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _fused_full(x, wr, wi, k):
+    return ops.spectral_layer_1d(x, wr, wi, k, path="xla")
+
+
+# -- pipelines ---------------------------------------------------------------
+def baseline_staged(x, wr, wi, k):
+    n = x.shape[-1]
+    fr, fi = _full_rfft(x)
+    tr, ti = _truncate(fr, fi, k)
+    yr, yi = _cgemm(wr, wi, tr, ti)
+    pr, pi = _zero_pad(yr, yi, n)
+    return _irfft(pr, pi, n)
+
+
+def fft_opt(x, wr, wi, k):
+    n = x.shape[-1]
+    tr, ti = _trunc_rdft(x, k)
+    yr, yi = _cgemm(wr, wi, tr, ti)
+    return _pad_irdft(yr, yi, n)
+
+
+def fused_fgemm(x, wr, wi, k):
+    n = x.shape[-1]
+    yr, yi = _fused_dft_gemm(x, wr, wi, k)
+    return _pad_irdft(yr, yi, n)
+
+
+def fused_gemmi(x, wr, wi, k):
+    tr, ti = _trunc_rdft(x, k)
+    return _fused_gemm_idft(tr, ti, wr, wi, x.shape[-1])
+
+
+def fused_full(x, wr, wi, k):
+    return _fused_full(x, wr, wi, k)
+
+
+# -- derived global-memory traffic model (paper's motivation) ---------------
+def traffic_bytes(b, h, o, n, k, pipeline: str, dtype_bytes: int = 4) -> int:
+    """HBM bytes moved, per the paper's staged-vs-fused accounting."""
+    nf = n // 2 + 1
+    rd = lambda *sizes: sum(sizes)
+    c = 2  # complex = 2 planes
+    x_ = b * h * n
+    Xf = b * h * nf * c
+    Xt = b * h * k * c
+    Y = b * o * k * c
+    Yp = b * o * nf * c
+    y = b * o * n
+    if pipeline == "baseline":
+        total = (x_ + Xf) + (Xf + Xt) + (Xt + Y) + (Y + Yp) + (Yp + y)
+    elif pipeline == "fft_opt":  # built-in truncation / zero-pad
+        total = (x_ + Xt) + (Xt + Y) + (Y + y)
+    elif pipeline == "fused_fgemm":
+        total = (x_ + Y) + (Y + y)
+    elif pipeline == "fused_gemmi":
+        total = (x_ + Xt) + (Xt + y)
+    else:  # fused_full
+        total = x_ + y
+    return total * dtype_bytes

@@ -1,0 +1,40 @@
+"""Benchmark driver — one module per paper table/figure family.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows. Wall-times are CPU XLA
+timings (ratios meaningful, absolutes are not TPU numbers); `derived`
+carries the paper-figure quantity (speedup / op fraction / traffic ratio).
+TPU roofline numbers live in the dry-run path (repro.launch.dryrun) and
+EXPERIMENTS.md.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweeps (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: prune,kernels,fft_opt,"
+                         "fusion,e2e")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_e2e, bench_fft_opt, bench_fusion,
+                            bench_kernels, bench_prune)
+    table = {
+        "prune": lambda: bench_prune.run(),
+        "kernels": lambda: bench_kernels.run(args.quick),
+        "fft_opt": lambda: bench_fft_opt.run(args.quick),
+        "fusion": lambda: bench_fusion.run(args.quick),
+        "e2e": lambda: bench_e2e.run(args.quick),
+    }
+    only = args.only.split(",") if args.only else list(table)
+    for name in only:
+        table[name]()
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: the TurboFNO fused spectral layer in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small FNO-2D, runs the same input through the three execution
+paths (staged jnp.fft reference, XLA truncated-DFT formulation, fused
+Pallas kernel) and shows they agree; then takes a few training steps on
+synthetic Darcy-flow data.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import fno
+from repro.data import pde
+from repro.optim import AdamW
+from repro.optim.schedule import constant
+from repro.train.train_step import make_train_step
+
+cfg = get_config("fno2d", reduced=True)
+key = jax.random.PRNGKey(0)
+params = fno.init_fno(key, cfg)
+x = jax.random.normal(key, (2, cfg.in_channels, *cfg.spatial))
+
+print(f"FNO-2D: {cfg.num_layers} layers, hidden={cfg.hidden}, "
+      f"spatial={cfg.spatial}, modes={cfg.modes} "
+      f"({cfg.param_count()/1e3:.0f}k params)")
+
+outs = {p: fno.apply_fno(params, cfg, x, path=p)
+        for p in ("ref", "xla", "pallas")}
+for name, y in outs.items():
+    err = float(jnp.abs(y - outs["ref"]).max())
+    print(f"  path={name:7s} out={y.shape}  max|Δ vs ref|={err:.2e}")
+
+opt = AdamW(lr=constant(1e-2), weight_decay=0.0)
+step = jax.jit(make_train_step(cfg, opt, fno_path="xla"))
+state = opt.init(params)
+print("training on synthetic Darcy flow:")
+for i in range(10):
+    batch = pde.darcy_batch(0, i, 4, cfg.spatial[0], iters=100)
+    params, state, m = step(params, state, batch)
+    if i % 3 == 0:
+        print(f"  step {i:2d}  rel-L2 loss {float(m['loss']):.4f}")
+print("done — see examples/train_fno.py for the full driver.")

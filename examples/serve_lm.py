@@ -1,0 +1,62 @@
+"""Batched LM serving: prefill + autoregressive decode with per-segment
+KV caches (ring buffers on sliding-window layers).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m
+
+mixtral demonstrates ring-buffer SWA caches; mamba2 demonstrates O(1)
+recurrent-state decode (no KV cache at all).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.train import serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    assert cfg.is_decoder
+    key = jax.random.PRNGKey(0)
+    params = tf.init_lm(key, cfg, jnp.float32)
+    max_len = args.prompt_len + args.new_tokens
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    prefill = jax.jit(serve_step.make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(serve_step.make_decode_step(cfg, sample=True,
+                                                 temperature=0.8))
+
+    logits, cache = prefill(params, {"tokens": prompts})
+    for i, seg in enumerate(cache["segments"]):
+        kinds = {k: tuple(v.shape) for k, v in seg.items()}
+        print(f"  cache segment {i}: {kinds}")
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for step_i in range(args.new_tokens - 1):
+        key, sk = jax.random.split(key)
+        tok, _, cache = decode(params, cache, tok, sk)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = (time.time() - t0) / max(args.new_tokens - 1, 1)
+    gen = jnp.stack(out, 1)
+    print(f"{args.arch}: batch={args.batch}, {dt*1e3:.1f} ms/token (CPU)")
+    for b in range(min(2, args.batch)):
+        print(f"  sampled[{b}]: {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

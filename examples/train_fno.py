@@ -1,0 +1,66 @@
+"""End-to-end FNO training driver (deliverable b): data generation →
+sharded train step → checkpointing → restart-safe loop.
+
+Reduced demo (runs in ~a minute on this CPU container):
+
+    PYTHONPATH=src python examples/train_fno.py --steps 60
+
+Full-scale target (the ~100M-parameter configuration; run on a real
+accelerator — one step is ~0.9 TFLOP at batch 8):
+
+    PYTHONPATH=src python examples/train_fno.py --full --steps 300 \
+        --batch 8 --lr 3e-4
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.core import fno
+from repro.data import pde
+from repro.optim import AdamW
+from repro.optim.schedule import cosine_warmup
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--full", action="store_true",
+                    help="fno2d-large (~134M params, per-mode weights)")
+    ap.add_argument("--path", default="xla", choices=["ref", "xla", "pallas"])
+    args = ap.parse_args()
+
+    cfg = get_config("fno2d-large" if args.full else "fno2d",
+                     reduced=not args.full)
+    key = jax.random.PRNGKey(0)
+    params = fno.init_fno(key, cfg)
+    n = cfg.spatial[0]
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"grid {cfg.spatial}, modes {cfg.modes}, "
+          f"weights={cfg.weight_mode}, path={args.path}")
+
+    opt = AdamW(lr=cosine_warmup(args.lr, args.steps // 10 + 1, args.steps),
+                weight_decay=0.0)
+    step = jax.jit(make_train_step(cfg, opt, fno_path=args.path))
+    batch_fn = lambda i: pde.darcy_batch(0, i, args.batch, n,
+                                         iters=150 if args.full else 100)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                             ckpt_dir=ckpt_dir, log_every=10)
+        trainer = Trainer(tcfg, step, batch_fn, params, opt.init(params))
+        out = trainer.run()
+    for m in out["metrics"]:
+        print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.2f}  {m['dt']*1e3:.0f} ms")
+    print(f"finished {out['final_step']} steps; "
+          f"stragglers flagged: {out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

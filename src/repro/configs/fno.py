@@ -1,0 +1,51 @@
+"""FNO configurations — the paper's own architecture (TurboFNO's target).
+
+``fno1d``/``fno2d`` match the paper's evaluated sizes: signal lengths
+N1=128 / N2=256 (Table 1), truncation ratios 25% and 50% (Sec. 3.1), hidden
+dims 32-128 (Sec. 5). ``fno2d-large`` is the end-to-end training target
+(~100M params with per-mode weights).
+"""
+from repro.configs.base import FNOConfig
+
+ARCH_ID_1D = "fno1d"
+ARCH_ID_2D = "fno2d"
+
+
+def fno1d() -> FNOConfig:
+    return FNOConfig(
+        name="fno1d", ndim=1, hidden=64, num_layers=4,
+        in_channels=1, out_channels=1,
+        spatial=(256,), modes=(64,),  # 50% of N/2+1 ~ paper's k=64 @ N=256
+        weight_mode="shared",
+    )
+
+
+def fno2d() -> FNOConfig:
+    return FNOConfig(
+        name="fno2d", ndim=2, hidden=64, num_layers=4,
+        in_channels=3, out_channels=1,  # (a(x,y), x, y) -> u(x,y)
+        spatial=(128, 128), modes=(32, 32),  # 50% truncation per axis
+        weight_mode="shared",
+    )
+
+
+def fno2d_large() -> FNOConfig:
+    """~100M-param per-mode FNO for the end-to-end training example."""
+    return FNOConfig(
+        name="fno2d-large", ndim=2, hidden=128, num_layers=4,
+        in_channels=3, out_channels=1,
+        spatial=(128, 128), modes=(32, 32),
+        weight_mode="per_mode",
+    )
+
+
+def reduced_1d() -> FNOConfig:
+    import dataclasses
+    return dataclasses.replace(
+        fno1d(), hidden=16, num_layers=2, spatial=(64,), modes=(16,))
+
+
+def reduced_2d() -> FNOConfig:
+    import dataclasses
+    return dataclasses.replace(
+        fno2d(), hidden=16, num_layers=2, spatial=(32, 32), modes=(8, 8))

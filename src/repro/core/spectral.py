@@ -1,0 +1,170 @@
+"""Spectral-transform algebra: truncated DFTs as MXU-friendly matmuls.
+
+TurboFNO's GPU kernels prune FFT butterflies whose outputs land in discarded
+frequency bands. The TPU-native equivalent (DESIGN.md §3.2) computes the
+truncated transform as a dense matmul with only the *kept* rows of the DFT
+matrix — pruning becomes row selection, truncation/zero-padding become the
+matrix shapes, and everything runs on the MXU.
+
+Conventions: transforms act on the LAST axis. Complex tensors are carried as
+(real, imag) pairs of real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# DFT matrix factories (host-side numpy; cached; O(N·k) memory)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def rdft_mats(n: int, modes: int, dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Forward truncated real-input DFT:  X[m] = sum_n x[n]·e^{-2πi mn/N}.
+
+    Returns (Cr, Ci), each [n, modes], so that for real x[..., n]:
+        Xr = x @ Cr,   Xi = x @ Ci.
+    """
+    assert modes <= n // 2 + 1, (n, modes)
+    m = np.arange(modes)[None, :]
+    k = np.arange(n)[:, None]
+    ang = 2.0 * np.pi * k * m / n
+    return (np.cos(ang).astype(dtype), (-np.sin(ang)).astype(dtype))
+
+
+@functools.lru_cache(maxsize=64)
+def irdft_mats(n: int, modes: int, dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of (truncate ∘ rFFT) with implicit zero padding:
+
+        y[j] = (1/N)·Σ_{m<modes} c_m·(Xr[m]·cos(2πmj/N) − Xi[m]·sin(2πmj/N)),
+
+    with hermitian fold c_0 = 1, c_m = 2 (m ≥ 1, m < N/2), c_{N/2} = 1.
+    Returns (Er, Ei), each [modes, n]:  y = Xr @ Er − Xi @ Ei.
+    Exactly equals jnp.fft.irfft(zero-pad(X), n).
+    """
+    assert modes <= n // 2 + 1
+    m = np.arange(modes)[:, None]
+    j = np.arange(n)[None, :]
+    ang = 2.0 * np.pi * m * j / n
+    c = np.full((modes, 1), 2.0)
+    c[0] = 1.0
+    if modes == n // 2 + 1 and n % 2 == 0:
+        c[-1] = 1.0  # Nyquist bin is its own conjugate
+    return ((c * np.cos(ang) / n).astype(dtype), (c * np.sin(ang) / n).astype(dtype))
+
+
+@functools.lru_cache(maxsize=64)
+def cdft_mats(n: int, modes: int, inverse: bool = False,
+              dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Complex truncated DFT matrix.
+
+    forward: F[k, m] = e^{-2πi km/N},  [n, modes]   (keep first `modes` rows)
+    inverse: E[m, j] = e^{+2πi mj/N}/N, [modes, n]  (zero-pad implicit)
+
+    NOTE (paper-faithful): TurboFNO keeps only the FIRST dimX fraction of the
+    complex axis — positive low frequencies only, no hermitian pair. The
+    truncate→pad→inverse round trip is therefore a projection, not identity
+    (classic FNO keeps ± corners instead; see DESIGN.md §3.4).
+    """
+    if not inverse:
+        k = np.arange(n)[:, None]
+        m = np.arange(modes)[None, :]
+        ang = 2.0 * np.pi * k * m / n
+        return (np.cos(ang).astype(dtype), (-np.sin(ang)).astype(dtype))
+    m = np.arange(modes)[:, None]
+    j = np.arange(n)[None, :]
+    ang = 2.0 * np.pi * m * j / n
+    return ((np.cos(ang) / n).astype(dtype), (np.sin(ang) / n).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# XLA-path transforms (matmul formulation; fused by XLA, no Pallas)
+# ---------------------------------------------------------------------------
+def truncated_rdft(x: jax.Array, modes: int) -> Tuple[jax.Array, jax.Array]:
+    """rFFT along last axis, keeping the first `modes` bins. Real input."""
+    n = x.shape[-1]
+    cr, ci = rdft_mats(n, modes, "float32")
+    cr, ci = jnp.asarray(cr, x.dtype), jnp.asarray(ci, x.dtype)
+    f32 = jnp.float32
+    return (jax.lax.dot_general(x, cr, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=f32),
+            jax.lax.dot_general(x, ci, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=f32))
+
+
+def padded_irdft(xr: jax.Array, xi: jax.Array, n: int) -> jax.Array:
+    """Inverse rFFT from `modes` kept bins, zero-padded to length n."""
+    modes = xr.shape[-1]
+    er, ei = irdft_mats(n, modes, "float32")
+    er, ei = jnp.asarray(er, xr.dtype), jnp.asarray(ei, xr.dtype)
+    dims = (((xr.ndim - 1,), (0,)), ((), ()))
+    f32 = jnp.float32
+    return (jax.lax.dot_general(xr, er, dims, preferred_element_type=f32)
+            - jax.lax.dot_general(xi, ei, dims, preferred_element_type=f32))
+
+
+def truncated_cdft(xr: jax.Array, xi: jax.Array,
+                   modes: int) -> Tuple[jax.Array, jax.Array]:
+    """Complex DFT along last axis keeping first `modes` bins."""
+    n = xr.shape[-1]
+    fr, fi = cdft_mats(n, modes, False, "float32")
+    fr, fi = jnp.asarray(fr, xr.dtype), jnp.asarray(fi, xr.dtype)
+    dims = (((xr.ndim - 1,), (0,)), ((), ()))
+    f32 = jnp.float32
+    dot = lambda a, b: jax.lax.dot_general(a, b, dims, preferred_element_type=f32)
+    return dot(xr, fr) - dot(xi, fi), dot(xr, fi) + dot(xi, fr)
+
+
+def padded_icdft(xr: jax.Array, xi: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
+    """Inverse complex DFT from first-`modes` bins zero-padded to n."""
+    modes = xr.shape[-1]
+    er, ei = cdft_mats(n, modes, True, "float32")
+    er, ei = jnp.asarray(er, xr.dtype), jnp.asarray(ei, xr.dtype)
+    dims = (((xr.ndim - 1,), (0,)), ((), ()))
+    f32 = jnp.float32
+    dot = lambda a, b: jax.lax.dot_general(a, b, dims, preferred_element_type=f32)
+    return dot(xr, er) - dot(xi, ei), dot(xr, ei) + dot(xi, er)
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting (paper Fig. 5 analogue — see benchmarks/bench_prune.py)
+# ---------------------------------------------------------------------------
+def fft_flops(n: int) -> float:
+    """Real-op count of a full radix-2 complex FFT (5 N log2 N convention)."""
+    return 5.0 * n * np.log2(n)
+
+
+def pruned_fft_ops(n: int, modes: int) -> int:
+    """Butterfly-output count of a DIF FFT pruned to the first `modes` bins.
+
+    Recursive decimation-in-frequency: the top stage produces an even-bin
+    branch (sums) and an odd-bin branch (diffs+twiddles); a branch is computed
+    only if it feeds a kept bin. Keeping bins [0, k): evens need ceil(k/2),
+    odds need floor(k/2). One "op" = one butterfly output (paper Fig. 5
+    counting: full 4-point FFT = 8 ops; k=1 → 3 ops (37.5%); k=2 → 6 (75%)).
+    """
+    if modes <= 0 or n <= 1:
+        return 0
+    ke, ko = (modes + 1) // 2, modes // 2
+    ops = (n // 2 if ke else 0) + (n // 2 if ko else 0)
+    return ops + pruned_fft_ops(n // 2, ke) + pruned_fft_ops(n // 2, ko)
+
+
+def fft_ops(n: int) -> int:
+    """Butterfly-output count of the full FFT (same counting as above)."""
+    return int(n * np.log2(n))
+
+
+def pruned_fft_flops(n: int, modes: int) -> float:
+    """Pruned-FFT real-op estimate, scaled to the 5·N·log2(N) convention."""
+    return fft_flops(n) * pruned_fft_ops(n, modes) / fft_ops(n)
+
+
+def truncated_dft_matmul_flops(n: int, modes: int, complex_input: bool) -> float:
+    """FLOPs of the MXU truncated-DFT formulation (per signal)."""
+    mults = 2 if not complex_input else 4
+    return 2.0 * mults * n * modes  # 2 flops per MAC

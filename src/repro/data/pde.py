@@ -1,0 +1,148 @@
+"""Synthetic PDE data generation in JAX (the FNO training substrate).
+
+* Burgers 1D:  u_t + u·u_x = ν·u_xx, periodic, spectral RK4 integrator.
+  Sample (u₀ GRF) → (u₀, u(T)) pairs — the classic FNO-1D benchmark task.
+* Darcy 2D:   -∇·(a(x)∇u) = f on the unit square, u=0 on ∂Ω; piecewise-
+  constant a from a thresholded GRF; solved with Jacobi-preconditioned CG
+  on a finite-difference stencil (pure jnp, fixed iteration count).
+
+Everything is stateless and seeded: batch i of a run is a pure function of
+(seed, i), so any host can regenerate any shard after failover
+(DESIGN.md §6 fault tolerance).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Gaussian random fields (periodic, power-law spectrum)
+# ---------------------------------------------------------------------------
+def grf_1d(key, batch: int, n: int, alpha: float = 2.5, tau: float = 7.0
+           ) -> jax.Array:
+    k = jnp.fft.rfftfreq(n, 1.0 / n)
+    spec = (k ** 2 + tau ** 2) ** (-alpha / 2.0)
+    kr, ki = jax.random.split(key)
+    re = jax.random.normal(kr, (batch, k.shape[0]))
+    im = jax.random.normal(ki, (batch, k.shape[0]))
+    coef = (re + 1j * im) * spec * n
+    return jnp.fft.irfft(coef, n=n, axis=-1)
+
+
+def grf_2d(key, batch: int, n: int, alpha: float = 2.0, tau: float = 3.0
+           ) -> jax.Array:
+    kx = jnp.fft.fftfreq(n, 1.0 / n)
+    ky = jnp.fft.rfftfreq(n, 1.0 / n)
+    k2 = kx[:, None] ** 2 + ky[None, :] ** 2
+    spec = (k2 + tau ** 2) ** (-alpha / 2.0)
+    kr, ki = jax.random.split(key)
+    re = jax.random.normal(kr, (batch, n, ky.shape[0]))
+    im = jax.random.normal(ki, (batch, n, ky.shape[0]))
+    coef = (re + 1j * im) * spec * n
+    return jnp.fft.irfft2(coef, s=(n, n), axes=(-2, -1))
+
+
+# ---------------------------------------------------------------------------
+# Burgers 1D
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n", "steps"))
+def burgers_solve(u0: jax.Array, *, nu: float = 0.01, t_final: float = 1.0,
+                  n: int = 256, steps: int = 200) -> jax.Array:
+    """Spectral RK4 for periodic Burgers. u0: [B, n] -> u(T): [B, n]."""
+    dt = t_final / steps
+    k = 2j * jnp.pi * jnp.fft.rfftfreq(n, 1.0 / n)
+    dealias = jnp.abs(jnp.fft.rfftfreq(n, 1.0 / n)) < (n // 3)
+
+    def rhs(uh):
+        u = jnp.fft.irfft(uh, n=n, axis=-1)
+        conv = jnp.fft.rfft(0.5 * u * u, axis=-1) * dealias
+        return -k * conv + nu * k ** 2 * uh
+
+    def step(uh, _):
+        k1 = rhs(uh)
+        k2 = rhs(uh + 0.5 * dt * k1)
+        k3 = rhs(uh + 0.5 * dt * k2)
+        k4 = rhs(uh + dt * k3)
+        return uh + dt / 6 * (k1 + 2 * k2 + 2 * k3 + k4), None
+
+    uh0 = jnp.fft.rfft(u0, axis=-1)
+    uhT, _ = jax.lax.scan(step, uh0, None, length=steps)
+    return jnp.fft.irfft(uhT, n=n, axis=-1)
+
+
+def burgers_batch(seed: int, index: int, batch: int, n: int = 256,
+                  nu: float = 0.01) -> Dict[str, jax.Array]:
+    """Deterministic batch `index` of a run: x=[B,1,n] u0, y=[B,1,n] u(T)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), index)
+    u0 = grf_1d(key, batch, n)
+    u0 = u0 / (jnp.std(u0, axis=-1, keepdims=True) + 1e-6)
+    uT = burgers_solve(u0, nu=nu, n=n)
+    return {"x": u0[:, None, :].astype(jnp.float32),
+            "y": uT[:, None, :].astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Darcy 2D
+# ---------------------------------------------------------------------------
+def _darcy_apply(a: jax.Array, u: jax.Array, h: float) -> jax.Array:
+    """-∇·(a∇u) with a 5-point harmonic-mean stencil; u=0 boundary."""
+    up = jnp.pad(u, ((0, 0), (1, 1), (1, 1)))
+    ap = jnp.pad(a, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    hm = lambda x, y: 2 * x * y / (x + y + 1e-12)
+    ae = hm(ap[:, 1:-1, 1:-1], ap[:, 1:-1, 2:])
+    aw = hm(ap[:, 1:-1, 1:-1], ap[:, 1:-1, :-2])
+    an = hm(ap[:, 1:-1, 1:-1], ap[:, 2:, 1:-1])
+    as_ = hm(ap[:, 1:-1, 1:-1], ap[:, :-2, 1:-1])
+    flux = (ae * (up[:, 1:-1, 2:] - u) + aw * (up[:, 1:-1, :-2] - u)
+            + an * (up[:, 2:, 1:-1] - u) + as_ * (up[:, :-2, 1:-1] - u))
+    return -flux / h ** 2
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def darcy_solve(a: jax.Array, f: jax.Array, iters: int = 200) -> jax.Array:
+    """CG for -∇·(a∇u)=f. a,f: [B, n, n] -> u: [B, n, n]."""
+    n = a.shape[-1]
+    h = 1.0 / (n + 1)
+    dot = lambda p, q: jnp.sum(p * q, axis=(-2, -1), keepdims=True)
+
+    def amul(u):
+        return _darcy_apply(a, u, h)
+
+    x = jnp.zeros_like(f)
+    r = f - amul(x)
+    p = r
+    rs = dot(r, r)
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        ap = amul(p)
+        alpha = rs / (dot(p, ap) + 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = dot(r, r)
+        p = r + (rs_new / (rs + 1e-30)) * p
+        return (x, r, p, rs_new), None
+
+    (x, _, _, _), _ = jax.lax.scan(body, (x, r, p, rs), None, length=iters)
+    return x
+
+
+def darcy_batch(seed: int, index: int, batch: int, n: int = 64,
+                iters: int = 200) -> Dict[str, jax.Array]:
+    """x = [B, 3, n, n] (a, grid_x, grid_y); y = [B, 1, n, n] u."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 77), index)
+    g = grf_2d(key, batch, n)
+    a = jnp.where(g > 0, 12.0, 3.0)
+    f = jnp.ones((batch, n, n))
+    u = darcy_solve(a, f, iters=iters)
+    xs = jnp.linspace(0, 1, n)
+    gx = jnp.broadcast_to(xs[None, :, None], (batch, n, n))
+    gy = jnp.broadcast_to(xs[None, None, :], (batch, n, n))
+    x = jnp.stack([a / 10.0, gx, gy], axis=1)
+    scale = 1.0 / (jnp.std(u) + 1e-9)
+    return {"x": x.astype(jnp.float32),
+            "y": (u * scale)[:, None].astype(jnp.float32)}

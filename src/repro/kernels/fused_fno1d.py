@@ -1,0 +1,138 @@
+"""Fused truncated-rDFT → CGEMM → padded-irDFT Pallas kernel (1D FNO layer).
+
+This is the paper's core contribution (§4.3) mapped to TPU:
+
+  * grid = (batch tiles, out-channel tiles, hidden tiles) with the HIDDEN
+    axis innermost — the FFT "pencils" are selected along the GEMM k-loop
+    direction exactly as in paper Fig. 6(c);
+  * per program, the truncated forward DFT of the x-slice is computed
+    straight into VMEM registers and consumed as the CGEMM A-tile — the
+    shared-memory forwarding of Fig. 7 with no HBM round trip;
+  * the iDFT runs as the CGEMM epilogue on the VMEM accumulator — Fig. 8;
+  * truncation/zero-padding/pruning are implicit in the DFT operand shapes.
+
+Layout note (the TPU replacement for warp swizzling): every contraction is
+arranged so no operand needs an in-kernel transpose —
+
+    x[bb,bh,N] · Cr[N,K]                  -> A[bb,bh,K]
+    A[bb,bh,K] ·(bh) W[bo,bh]             -> acc[bb,K,bo]   (shared W)
+    acc[bb,K,bo] ·(K) Er[K,N]             -> y[bb,bo,N]
+
+i.e. the accumulator is laid out [batch, modes, out] so that both the CGEMM
+accumulation and the iDFT epilogue are plain dot_generals over the minor
+dims. For per-mode weights W[bo,bh,K] the accumulator is [K,bb,bo] with K as
+a batched dot dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_F32 = jnp.float32
+
+
+def _dot(a, b, dims):
+    return jax.lax.dot_general(a, b, (dims, ((), ())),
+                               preferred_element_type=_F32)
+
+
+def _fused_kernel_shared(x_ref, wr_ref, wi_ref, cr_ref, ci_ref, er_ref,
+                         ei_ref, y_ref, accr, acci):
+    """Shared-weight (paper CGEMM) variant. Block shapes:
+    x[bb,bh,N] w[bo,bh] c[N,K] e[K,N] y[bb,bo,N] acc[bb,K,bo]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr[...] = jnp.zeros_like(accr)
+        acci[...] = jnp.zeros_like(acci)
+
+    x = x_ref[...]
+    # Truncated forward rDFT along N — the "FFT writing its A-tile to smem".
+    ar = _dot(x, cr_ref[...], (((2,), (0,))))  # [bb,bh,K]
+    ai = _dot(x, ci_ref[...], (((2,), (0,))))
+    # CGEMM over hidden (the k-loop MAC): contract bh -> acc[bb,K,bo].
+    wr, wi = wr_ref[...], wi_ref[...]
+    accr[...] += _dot(ar, wr, (((1,), (1,)))) - _dot(ai, wi, (((1,), (1,))))
+    acci[...] += _dot(ar, wi, (((1,), (1,)))) + _dot(ai, wr, (((1,), (1,))))
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        # Padded irDFT epilogue: contract K -> y[bb,bo,N].
+        yr = _dot(accr[...], er_ref[...], (((1,), (0,))))
+        yi = _dot(acci[...], ei_ref[...], (((1,), (0,))))
+        y_ref[...] = (yr - yi).astype(y_ref.dtype)
+
+
+def _fused_kernel_permode(x_ref, wr_ref, wi_ref, cr_ref, ci_ref, er_ref,
+                          ei_ref, y_ref, accr, acci):
+    """Per-mode-weight (classic FNO) variant. w[bo,bh,K]; acc[K,bb,bo]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr[...] = jnp.zeros_like(accr)
+        acci[...] = jnp.zeros_like(acci)
+
+    x = x_ref[...]
+    ar = _dot(x, cr_ref[...], (((2,), (0,))))  # [bb,bh,K]
+    ai = _dot(x, ci_ref[...], (((2,), (0,))))
+    wr, wi = wr_ref[...], wi_ref[...]
+
+    def bdot(a, w):  # batched over K: [bb,bh,K]x[bo,bh,K] -> [K,bb,bo]
+        return jax.lax.dot_general(
+            a, w, (((1,), (1,)), ((2,), (2,))), preferred_element_type=_F32)
+
+    accr[...] += bdot(ar, wr) - bdot(ai, wi)
+    acci[...] += bdot(ar, wi) + bdot(ai, wr)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        yr = _dot(accr[...], er_ref[...], (((0,), (0,))))  # [bb,bo,N]
+        yi = _dot(acci[...], ei_ref[...], (((0,), (0,))))
+        y_ref[...] = (yr - yi).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
+def fused_fno1d_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                     cr: jax.Array, ci: jax.Array, er: jax.Array,
+                     ei: jax.Array, bb: int, bo: int, bh: int,
+                     interpret: bool = False) -> jax.Array:
+    """x: [B,H,N] real; w: [O,H] or [O,H,K]; c: [N,K]; e: [K,N] -> y [B,O,N].
+
+    All of B,O,H must divide by (bb,bo,bh); K,N are whole blocks (ops.py
+    pads everything to (8,128)-aligned shapes).
+    """
+    b, h, n = x.shape
+    o = wr.shape[0]
+    k = cr.shape[1]
+    per_mode = wr.ndim == 3
+    grid = (b // bb, o // bo, h // bh)
+
+    x_spec = pl.BlockSpec((bb, bh, n), lambda i, j, kk: (i, kk, 0))
+    if per_mode:
+        w_spec = pl.BlockSpec((bo, bh, k), lambda i, j, kk: (j, kk, 0))
+        acc_shape = (k, bb, bo)
+        kernel = _fused_kernel_permode
+    else:
+        w_spec = pl.BlockSpec((bo, bh), lambda i, j, kk: (j, kk))
+        acc_shape = (bb, k, bo)
+        kernel = _fused_kernel_shared
+    c_spec = pl.BlockSpec((n, k), lambda i, j, kk: (0, 0))
+    e_spec = pl.BlockSpec((k, n), lambda i, j, kk: (0, 0))
+    y_spec = pl.BlockSpec((bb, bo, n), lambda i, j, kk: (i, j, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, w_spec, c_spec, c_spec, e_spec, e_spec],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((b, o, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
+                        pltpu.VMEM(acc_shape, _F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, wr, wi, cr, ci, er, ei)

@@ -1,0 +1,201 @@
+"""Fused 2D FNO-layer Pallas kernels.
+
+Two variants:
+
+* ``fused_fno2d_call`` — paper-faithful partial fusion (§4.3, Fig. 6): the
+  stage-1 truncated rDFT along Y runs as a separate kernel (see dft.py); this
+  kernel fuses [truncated cDFT along X → CGEMM over hidden → padded icDFT
+  along X], operating on complex stage-1 output. Matches TurboFNO, which
+  fuses only the FFT stage adjacent to the GEMM.
+
+* ``fused_fno2d_full_call`` — BEYOND-paper full fusion: the entire layer
+  [rDFT_Y → cDFT_X → CGEMM → icDFT_X → irDFT_Y] in one kernel. Possible on
+  TPU because FNO's out-channel count fits a single lane tile (O ≤ 128), so
+  fusing the producer rDFT into the k-loop incurs no re-reads. §Perf
+  quantifies the extra HBM-traffic saving over the paper's scheme.
+
+Accumulator layouts avoid all in-kernel transposes (see fused_fno1d.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_F32 = jnp.float32
+
+
+def _dot(a, b, dims):
+    return jax.lax.dot_general(a, b, (dims, ((), ())),
+                               preferred_element_type=_F32)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful partial fusion: cDFT_X -> CGEMM -> icDFT_X
+# ---------------------------------------------------------------------------
+def _fused2d_kernel(zr_ref, zi_ref, wr_ref, wi_ref, fr_ref, fi_ref,
+                    gr_ref, gi_ref, yr_ref, yi_ref, accr, acci):
+    """Blocks: z[bb,bh,X,KY], w[bo,bh], f[X,KX], g[KX,X],
+    y[bb,KY,bo,X], acc[bb,KY,KX,bo]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr[...] = jnp.zeros_like(accr)
+        acci[...] = jnp.zeros_like(acci)
+
+    zr, zi = zr_ref[...], zi_ref[...]
+    fr, fi = fr_ref[...], fi_ref[...]
+    # Truncated complex DFT along X: contract dim 2 -> [bb,bh,KY,KX].
+    ar = _dot(zr, fr, ((2,), (0,))) - _dot(zi, fi, ((2,), (0,)))
+    ai = _dot(zr, fi, ((2,), (0,))) + _dot(zi, fr, ((2,), (0,)))
+    # CGEMM over hidden: contract bh -> acc[bb,KY,KX,bo].
+    wr, wi = wr_ref[...], wi_ref[...]
+    accr[...] += _dot(ar, wr, ((1,), (1,))) - _dot(ai, wi, ((1,), (1,)))
+    acci[...] += _dot(ar, wi, ((1,), (1,))) + _dot(ai, wr, ((1,), (1,)))
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        # Padded icDFT along X: contract KX -> [bb,KY,bo,X].
+        gr, gi = gr_ref[...], gi_ref[...]
+        cr, ci = accr[...], acci[...]
+        yr_ref[...] = (_dot(cr, gr, ((2,), (0,)))
+                       - _dot(ci, gi, ((2,), (0,)))).astype(yr_ref.dtype)
+        yi_ref[...] = (_dot(cr, gi, ((2,), (0,)))
+                       + _dot(ci, gr, ((2,), (0,)))).astype(yi_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
+def fused_fno2d_call(zr: jax.Array, zi: jax.Array, wr: jax.Array,
+                     wi: jax.Array, fr: jax.Array, fi: jax.Array,
+                     gr: jax.Array, gi: jax.Array, bb: int, bo: int, bh: int,
+                     interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """z: [B,H,X,KY] complex pair (stage-1 output); w: [O,H]; f: [X,KX];
+    g: [KX,X]. Returns y pair [B,KY,O,X] (caller transposes)."""
+    b, h, x, ky = zr.shape
+    o = wr.shape[0]
+    kx = fr.shape[1]
+    grid = (b // bb, o // bo, h // bh)
+
+    z_spec = pl.BlockSpec((bb, bh, x, ky), lambda i, j, kk: (i, kk, 0, 0))
+    w_spec = pl.BlockSpec((bo, bh), lambda i, j, kk: (j, kk))
+    f_spec = pl.BlockSpec((x, kx), lambda i, j, kk: (0, 0))
+    g_spec = pl.BlockSpec((kx, x), lambda i, j, kk: (0, 0))
+    y_spec = pl.BlockSpec((bb, ky, bo, x), lambda i, j, kk: (i, 0, j, 0))
+    out_sd = jax.ShapeDtypeStruct((b, ky, o, x), zr.dtype)
+
+    return pl.pallas_call(
+        _fused2d_kernel,
+        grid=grid,
+        in_specs=[z_spec, z_spec, w_spec, w_spec, f_spec, f_spec,
+                  g_spec, g_spec],
+        out_specs=[y_spec, y_spec],
+        out_shape=[out_sd, out_sd],
+        scratch_shapes=[pltpu.VMEM((bb, ky, kx, bo), _F32),
+                        pltpu.VMEM((bb, ky, kx, bo), _F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(zr, zi, wr, wi, fr, fi, gr, gi)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper full fusion: rDFT_Y -> cDFT_X -> CGEMM -> icDFT_X -> irDFT_Y
+# ---------------------------------------------------------------------------
+def _fused2d_full_kernel(x_ref, wr_ref, wi_ref, cr_ref, ci_ref, fr_ref,
+                         fi_ref, gr_ref, gi_ref, er_ref, ei_ref, y_ref,
+                         accr, acci):
+    """Blocks: x[bb,bh,X,Y], w[bo,bh] (or [bo,bh,KX,KY]), c[Y,KY], f[X,KX],
+    g[KX,X], e[KY,Y], y[bb,bo,X,Y], acc[bb,KY,KX,bo] ([KY,KX,bb,bo] permode).
+    """
+    per_mode = wr_ref.ndim == 4
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr[...] = jnp.zeros_like(accr)
+        acci[...] = jnp.zeros_like(acci)
+
+    xv = x_ref[...]
+    # Stage 1: truncated rDFT along Y (real input) -> [bb,bh,X,KY].
+    zr = _dot(xv, cr_ref[...], ((3,), (0,)))
+    zi = _dot(xv, ci_ref[...], ((3,), (0,)))
+    # Stage 2: truncated cDFT along X -> [bb,bh,KY,KX].
+    fr, fi = fr_ref[...], fi_ref[...]
+    ar = _dot(zr, fr, ((2,), (0,))) - _dot(zi, fi, ((2,), (0,)))
+    ai = _dot(zr, fi, ((2,), (0,))) + _dot(zi, fr, ((2,), (0,)))
+    wr, wi = wr_ref[...], wi_ref[...]
+    if per_mode:
+        # batched over (KX,KY): [bb,bh,KY,KX]x[bo,bh,KX,KY] -> [KY,KX,bb,bo]
+        def bdot(a, w):
+            return jax.lax.dot_general(
+                a, w, (((1,), (1,)), ((2, 3), (3, 2))),
+                preferred_element_type=_F32)
+    else:
+        def bdot(a, w):  # contract bh -> [bb,KY,KX,bo]
+            return _dot(a, w, ((1,), (1,)))
+    accr[...] += bdot(ar, wr) - bdot(ai, wi)
+    acci[...] += bdot(ar, wi) + bdot(ai, wr)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        gr, gi = gr_ref[...], gi_ref[...]
+        cr_, ci_ = accr[...], acci[...]
+        kx_axis = 1 if per_mode else 2
+        # Padded icDFT along X: -> [bb,KY,bo,X] (or [KY,bb,bo,X] permode).
+        tr = (_dot(cr_, gr, ((kx_axis,), (0,)))
+              - _dot(ci_, gi, ((kx_axis,), (0,))))
+        ti = (_dot(cr_, gi, ((kx_axis,), (0,)))
+              + _dot(ci_, gr, ((kx_axis,), (0,))))
+        # Padded irDFT along Y (real output): contract KY -> [bb,bo,X,Y].
+        ky_axis = 0 if per_mode else 1
+        y = (_dot(tr, er_ref[...], ((ky_axis,), (0,)))
+             - _dot(ti, ei_ref[...], ((ky_axis,), (0,))))
+        if per_mode:  # [bb,bo,X,Y] already (KY was dim0, bb dim1 -> dims ok)
+            pass
+        y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
+def fused_fno2d_full_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                          cr: jax.Array, ci: jax.Array, fr: jax.Array,
+                          fi: jax.Array, gr: jax.Array, gi: jax.Array,
+                          er: jax.Array, ei: jax.Array, bb: int, bo: int,
+                          bh: int, interpret: bool = False) -> jax.Array:
+    """Whole 2D FNO spectral layer in one kernel.
+
+    x: [B,H,X,Y] real; w: [O,H] or [O,H,KX,KY]; c: [Y,KY]; f: [X,KX];
+    g: [KX,X]; e: [KY,Y]. Returns y [B,O,X,Y] real.
+    """
+    b, h, nx, ny = x.shape
+    o = wr.shape[0]
+    ky = cr.shape[1]
+    kx = fr.shape[1]
+    per_mode = wr.ndim == 4
+    grid = (b // bb, o // bo, h // bh)
+
+    x_spec = pl.BlockSpec((bb, bh, nx, ny), lambda i, j, kk: (i, kk, 0, 0))
+    if per_mode:
+        w_spec = pl.BlockSpec((bo, bh, kx, ky), lambda i, j, kk: (j, kk, 0, 0))
+        acc_shape = (ky, kx, bb, bo)
+    else:
+        w_spec = pl.BlockSpec((bo, bh), lambda i, j, kk: (j, kk))
+        acc_shape = (bb, ky, kx, bo)
+    mat = lambda r, c_: pl.BlockSpec((r, c_), lambda i, j, kk: (0, 0))
+    y_spec = pl.BlockSpec((bb, bo, nx, ny), lambda i, j, kk: (i, j, 0, 0))
+
+    return pl.pallas_call(
+        _fused2d_full_kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, w_spec, mat(ny, ky), mat(ny, ky),
+                  mat(nx, kx), mat(nx, kx), mat(kx, nx), mat(kx, nx),
+                  mat(ky, ny), mat(ky, ny)],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((b, o, nx, ny), x.dtype),
+        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
+                        pltpu.VMEM(acc_shape, _F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, wr, wi, cr, ci, fr, fi, gr, gi, er, ei)

@@ -1,0 +1,237 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles (8,128)-alignment padding, block-size selection, and path dispatch:
+
+  path="ref"    — jnp.fft staged oracle (the "PyTorch baseline")
+  path="xla"    — truncated-DFT matmul formulation, fused by XLA (runs on
+                  any backend; this is what the distributed dry-run lowers)
+  path="pallas" — the fused TurboFNO kernels (interpret=True off-TPU)
+
+Padding rules: modes K and channel dims are padded with zeros — padded DFT
+rows/weight entries contribute exactly zero through the linear pipeline, so
+results are sliced back without error.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spectral
+from repro.kernels import cgemm as cgemm_k
+from repro.kernels import dft as dft_k
+from repro.kernels import fused_fno1d as f1d
+from repro.kernels import fused_fno2d as f2d
+from repro.kernels import ref as ref_k
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    return (not on_tpu()) if flag is None else flag
+
+
+def _rup(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor-friendly block: pad dim up to a multiple of block."""
+    return min(pref, _rup(dim, 8)) if dim < pref else pref
+
+
+# ---------------------------------------------------------------------------
+# Standalone truncated-DFT kernels (paper §3.3 — FFT w/ built-in filtering)
+# ---------------------------------------------------------------------------
+def truncated_rdft(x: jax.Array, modes: int, *, path: str = "pallas",
+                   block_rows: int = 256,
+                   interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """rFFT along the last axis keeping `modes` bins. x: [..., N]."""
+    if path == "ref":
+        return ref_k.ref_truncated_rdft(x, modes)
+    if path == "xla":
+        return spectral.truncated_rdft(x, modes)
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    kp = _rup(modes, 128)
+    cr, ci = spectral.rdft_mats(n, modes)
+    cr = _pad_axis(jnp.asarray(cr, x.dtype), 1, kp)
+    ci = _pad_axis(jnp.asarray(ci, x.dtype), 1, kp)
+    br = _pick_block(m, block_rows)
+    x2 = _pad_axis(x.reshape(m, n), 0, _rup(m, br))
+    xr, xi = dft_k._rdft_call(x2, cr, ci, br, _interpret(interpret))
+    return (xr[:m, :modes].reshape(*lead, modes),
+            xi[:m, :modes].reshape(*lead, modes))
+
+
+def padded_irdft(xr: jax.Array, xi: jax.Array, n: int, *,
+                 path: str = "pallas", block_rows: int = 256,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Inverse rFFT from `modes` bins zero-padded to length n."""
+    if path == "ref":
+        return ref_k.ref_padded_irdft(xr, xi, n)
+    if path == "xla":
+        return spectral.padded_irdft(xr, xi, n)
+    modes = xr.shape[-1]
+    lead = xr.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    er, ei = spectral.irdft_mats(n, modes)
+    kp = _rup(modes, 128)
+    er = _pad_axis(jnp.asarray(er, xr.dtype), 0, kp)
+    ei = _pad_axis(jnp.asarray(ei, xr.dtype), 0, kp)
+    br = _pick_block(m, block_rows)
+    mp = _rup(m, br)
+    xr2 = _pad_axis(_pad_axis(xr.reshape(m, modes), 1, kp), 0, mp)
+    xi2 = _pad_axis(_pad_axis(xi.reshape(m, modes), 1, kp), 0, mp)
+    y = dft_k._irdft_call(xr2, xi2, er, ei, br, _interpret(interpret))
+    return y[:m].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# Standalone CGEMM
+# ---------------------------------------------------------------------------
+def cgemm(ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array, *,
+          path: str = "pallas", bm: int = 128, bn: int = 128, bk: int = 128,
+          interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """(M,K)x(K,N) complex matmul."""
+    if path in ("ref", "xla"):
+        return ref_k.ref_cgemm(ar, ai, br, bi)
+    m, k = ar.shape
+    _, n = br.shape
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    mp, np_, kp = _rup(m, bm), _rup(n, bn), _rup(k, bk)
+    pad2 = lambda a, r, c: _pad_axis(_pad_axis(a, 0, r), 1, c)
+    cr, ci = cgemm_k.cgemm_call(
+        pad2(ar, mp, kp), pad2(ai, mp, kp), pad2(br, kp, np_),
+        pad2(bi, kp, np_), bm=bm, bn=bn, bk=bk,
+        interpret=_interpret(interpret))
+    return cr[:m, :n], ci[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused FNO spectral layers (the paper's contribution)
+# ---------------------------------------------------------------------------
+def _mats_1d(n: int, modes: int, kp: int, dtype):
+    cr, ci = spectral.rdft_mats(n, modes)
+    er, ei = spectral.irdft_mats(n, modes)
+    pad_c = lambda a: _pad_axis(jnp.asarray(a, dtype), 1, kp)
+    pad_e = lambda a: _pad_axis(jnp.asarray(a, dtype), 0, kp)
+    return pad_c(cr), pad_c(ci), pad_e(er), pad_e(ei)
+
+
+def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                      modes: int, *, path: str = "pallas",
+                      bb: int = 8, bo: int = 128, bh: int = 128,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Full 1D FNO spectral layer. x: [B,H,N]; w: [O,H] or [O,H,modes]."""
+    if path == "ref":
+        return ref_k.ref_fno1d(x, wr, wi, modes)
+    n = x.shape[-1]
+    if path == "xla":
+        xr, xi = spectral.truncated_rdft(x, modes)
+        eq = "oh,bhm->bom" if wr.ndim == 2 else "ohm,bhm->bom"
+        yr = jnp.einsum(eq, wr, xr) - jnp.einsum(eq, wi, xi)
+        yi = jnp.einsum(eq, wr, xi) + jnp.einsum(eq, wi, xr)
+        return spectral.padded_irdft(yr, yi, n)
+
+    b, h, _ = x.shape
+    o = wr.shape[0]
+    per_mode = wr.ndim == 3
+    kp = _rup(modes, 128)
+    bb = _pick_block(b, bb)
+    bo = _pick_block(o, bo)
+    bh = _pick_block(h, bh)
+    bp, op_, hp = _rup(b, bb), _rup(o, bo), _rup(h, bh)
+    cr, ci, er, ei = _mats_1d(n, modes, kp, x.dtype)
+    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+    wpad = lambda w: _pad_axis(_pad_axis(
+        (_pad_axis(w, 2, kp) if per_mode else w), 0, op_), 1, hp)
+    y = f1d.fused_fno1d_call(xpad, wpad(wr), wpad(wi), cr, ci, er, ei,
+                             bb=bb, bo=bo, bh=bh,
+                             interpret=_interpret(interpret))
+    return y[:b, :o]
+
+
+def _mats_2d(nx: int, ny: int, kx: int, ky: int, dtype):
+    cr, ci = spectral.rdft_mats(ny, ky)  # stage-1: rDFT along Y
+    fr, fi = spectral.cdft_mats(nx, kx, False)  # stage-2: cDFT along X
+    gr, gi = spectral.cdft_mats(nx, kx, True)  # inverse cDFT along X
+    er, ei = spectral.irdft_mats(ny, ky)  # inverse rDFT along Y
+    j = lambda a: jnp.asarray(a, dtype)
+    return (j(cr), j(ci), j(fr), j(fi), j(gr), j(gi), j(er), j(ei))
+
+
+def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                      modes: Tuple[int, int], *, path: str = "pallas",
+                      variant: str = "full", bb: int = 2, bo: int = 128,
+                      bh: int = 32,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Full 2D FNO spectral layer, TurboFNO truncation convention.
+
+    x: [B,H,X,Y]; w: [O,H] or [O,H,kx,ky]. variant: "partial" fuses only
+    around the CGEMM (paper-faithful); "full" fuses the entire layer
+    (beyond-paper, DESIGN.md §3.4).
+    """
+    kx, ky = modes
+    if path == "ref":
+        return ref_k.ref_fno2d(x, wr, wi, modes)
+    nx, ny = x.shape[-2:]
+    per_mode = wr.ndim == 4
+    if path == "xla":
+        zr, zi = spectral.truncated_rdft(x, ky)  # [B,H,X,ky]
+        zr, zi = jnp.swapaxes(zr, -1, -2), jnp.swapaxes(zi, -1, -2)
+        ar, ai = spectral.truncated_cdft(zr, zi, kx)  # [B,H,ky,kx]
+        eq = "oh,bhyx->boyx" if not per_mode else "ohxy,bhyx->boyx"
+        yr = jnp.einsum(eq, wr, ar) - jnp.einsum(eq, wi, ai)
+        yi = jnp.einsum(eq, wr, ai) + jnp.einsum(eq, wi, ar)
+        tr, ti = spectral.padded_icdft(yr, yi, nx)  # [B,O,ky,X]
+        tr, ti = jnp.swapaxes(tr, -1, -2), jnp.swapaxes(ti, -1, -2)
+        yr2 = spectral.padded_irdft(tr, ti, ny)  # real [B,O,X,Y]
+        return yr2
+
+    b, h = x.shape[:2]
+    o = wr.shape[0]
+    bb = _pick_block(b, bb)
+    bo = _pick_block(o, bo)
+    bh = _pick_block(h, bh)
+    bp, op_, hp = _rup(b, bb), _rup(o, bo), _rup(h, bh)
+    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+    cr, ci, fr, fi, gr, gi, er, ei = _mats_2d(nx, ny, kx, ky, x.dtype)
+
+    def wpad(w):
+        return _pad_axis(_pad_axis(w, 0, op_), 1, hp)
+
+    itp = _interpret(interpret)
+    if variant == "full":
+        y = f2d.fused_fno2d_full_call(
+            xpad, wpad(wr), wpad(wi), cr, ci, fr, fi, gr, gi, er, ei,
+            bb=bb, bo=bo, bh=bh, interpret=itp)
+        return y[:b, :o]
+
+    if per_mode:
+        raise NotImplementedError(
+            "paper-faithful partial fusion implements the paper's shared-"
+            "weight CGEMM; use variant='full' or path='xla' for per_mode")
+    # paper-faithful: stage-1 truncated rDFT as separate kernel
+    zr, zi = truncated_rdft(xpad, ky, path="pallas", interpret=itp)
+    yr, yi = f2d.fused_fno2d_call(zr, zi, wpad(wr), wpad(wi), fr, fi, gr, gi,
+                                  bb=bb, bo=bo, bh=bh, interpret=itp)
+    # y pair [B,KY,O,X] -> [B,O,X,KY], then final padded irDFT along Y.
+    yr = jnp.transpose(yr[:b, :, :o], (0, 2, 3, 1))
+    yi = jnp.transpose(yi[:b, :, :o], (0, 2, 3, 1))
+    return padded_irdft(yr, yi, ny, path="pallas", interpret=itp)

@@ -1,0 +1,261 @@
+"""Dry-run cell construction: (arch × shape × mesh) -> jit-able step +
+ShapeDtypeStruct args + input shardings + MODEL_FLOPS.
+
+No device allocation happens here: params/optimizer/cache/batch are all
+``jax.eval_shape`` stand-ins (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import FNOConfig, ModelConfig, ShapeSpec
+from repro.core import fno as fno_mod
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.optim import AdamW
+from repro.optim.schedule import cosine_warmup
+from repro.roofline import analysis as roof
+from repro.train import serve_step, train_step as ts
+
+# per-arch training knobs (memory fitting at 256 chips; EXPERIMENTS.md)
+DEFAULT_MICROBATCHES = 8
+MICROBATCHES = {
+    "nemotron-4-340b": 8, "arctic-480b": 8,
+}
+OPT_STATE_DTYPE = {
+    "nemotron-4-340b": "bfloat16", "arctic-480b": "bfloat16",
+}
+GRAD_ACC_DTYPE = {
+    "nemotron-4-340b": "bfloat16", "arctic-480b": "bfloat16",
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    model_flops: float
+    ctx: shd.ShardingContext
+    out_shardings: Any = None
+
+
+def _wrap_ctx(fn, ctx):
+    @functools.wraps(fn)
+    def wrapped(*a):
+        with shd.sharding_context(ctx):
+            return fn(*a)
+    return wrapped
+
+
+def _optimizer(arch: str) -> AdamW:
+    return AdamW(lr=cosine_warmup(3e-4, 2000, 100_000),
+                 state_dtype=OPT_STATE_DTYPE.get(arch))
+
+
+def _lm_batch_sds(cfg: ModelConfig, shape: ShapeSpec, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        out["inputs_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    jnp.bfloat16)
+    else:
+        s_tok = s - (cfg.num_prefix_embeds if cfg.frontend == "vision" else 0)
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+        if cfg.frontend == "vision":
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_prefix_embeds, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        ls = s if cfg.frontend == "audio" else out["tokens"].shape[1]
+        out["labels"] = jax.ShapeDtypeStruct((shape.global_batch, ls),
+                                             jnp.int32)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               reduced: bool = False) -> Cell:
+    cfg = get_config(arch, reduced=reduced)
+    shape = get_shape(shape_name, reduced=reduced)
+    n = mesh.devices.size
+
+    if isinstance(cfg, FNOConfig):
+        return _build_fno_train(arch, cfg, shape, mesh)
+    kind = shape.kind
+    if kind == "prefill" and not cfg.is_decoder:
+        return _build_encoder(arch, cfg, shape, mesh)
+    if kind == "train":
+        return _build_lm_train(arch, cfg, shape, mesh, reduced)
+    if kind == "prefill":
+        return _build_prefill(arch, cfg, shape, mesh)
+    return _build_decode(arch, cfg, shape, mesh, shape_name == "long_500k")
+
+
+# ---------------------------------------------------------------------------
+def _build_lm_train(arch, cfg, shape, mesh, reduced):
+    ctx = shd.make_context(cfg, mesh, kind="train")
+    opt = _optimizer(arch)
+    mb = 1 if reduced else MICROBATCHES.get(arch, DEFAULT_MICROBATCHES)
+    import jax.numpy as _jnp
+    gdt = _jnp.dtype(GRAD_ACC_DTYPE[arch]) if arch in GRAD_ACC_DTYPE else None
+    step = ts.make_train_step(cfg, opt, microbatches=mb, remat=not reduced,
+                              grad_acc_dtype=gdt)
+
+    with shd.sharding_context(ctx):
+        params = jax.eval_shape(
+            lambda: tf.init_lm(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+        opt_state = jax.eval_shape(opt.init, params)
+    batch = _lm_batch_sds(cfg, shape, with_labels=True)
+
+    pspec = shd.param_specs(cfg, mesh, params)
+    ospec = {"m": pspec, "v": pspec, "step": P()}
+    bspec = shd.batch_specs(cfg, ctx, batch)
+    sh = lambda t: shd.shardings_from_specs(t, mesh)
+    mf = roof.lm_model_flops(cfg, "train", shape.seq_len, shape.global_batch)
+    return Cell(arch, shape.name, _wrap_ctx(step, ctx),
+                (params, opt_state, batch),
+                (sh(pspec), sh(ospec), sh(bspec)), mf, ctx)
+
+
+def _infer_fsdp(cfg, mesh) -> bool:
+    """Inference keeps weights TP-sharded only (no per-step weight
+    all-gathers) unless params exceed ~8 GiB/chip that way."""
+    tp = mesh.shape.get("model", 1)
+    return cfg.param_count() * 2 / tp > 8 * 2 ** 30
+
+
+def _build_prefill(arch, cfg, shape, mesh):
+    ctx = shd.make_context(cfg, mesh, kind="prefill")
+    step = serve_step.make_prefill_step(cfg, max_len=shape.seq_len)
+    with shd.sharding_context(ctx):
+        params = jax.eval_shape(
+            lambda: tf.init_lm(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+    batch = _lm_batch_sds(cfg, shape, with_labels=False)
+    pspec = shd.param_specs(cfg, mesh, params, fsdp=_infer_fsdp(cfg, mesh))
+    bspec = shd.batch_specs(cfg, ctx, batch)
+    sh = lambda t: shd.shardings_from_specs(t, mesh)
+    mf = roof.lm_model_flops(cfg, "prefill", shape.seq_len,
+                             shape.global_batch)
+    return Cell(arch, shape.name, _wrap_ctx(step, ctx), (params, batch),
+                (sh(pspec), sh(bspec)), mf, ctx)
+
+
+def _build_encoder(arch, cfg, shape, mesh):
+    ctx = shd.make_context(cfg, mesh, kind="prefill")
+    step = serve_step.make_encoder_step(cfg)
+    with shd.sharding_context(ctx):
+        params = jax.eval_shape(
+            lambda: tf.init_lm(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+    batch = _lm_batch_sds(cfg, shape, with_labels=False)
+    pspec = shd.param_specs(cfg, mesh, params, fsdp=_infer_fsdp(cfg, mesh))
+    bspec = shd.batch_specs(cfg, ctx, batch)
+    sh = lambda t: shd.shardings_from_specs(t, mesh)
+    mf = roof.lm_model_flops(cfg, "prefill", shape.seq_len,
+                             shape.global_batch)
+    return Cell(arch, shape.name, _wrap_ctx(step, ctx), (params, batch),
+                (sh(pspec), sh(bspec)), mf, ctx)
+
+
+def _cache_gib(cfg, b, s, ctx, mesh) -> float:
+    """Estimated per-chip KV-cache GiB under head+batch sharding."""
+    if not cfg.has_attention:
+        return 0.0
+    tp = mesh.shape.get("model", 1)
+    kv_eff = cfg.num_kv_heads * ctx.kv_repeat_factor
+    total = cfg.num_layers * b * s * kv_eff * cfg.head_dim * 2 * 2
+    div = (min(b, mesh.shape.get("data", 1))
+           * (tp if ctx.attn_sharded and kv_eff % tp == 0 else 1))
+    return total / div / 2 ** 30
+
+
+def _build_decode(arch, cfg, shape, mesh, shard_seq: bool):
+    ctx = shd.make_context(cfg, mesh, kind="decode")
+    b, s = shape.global_batch, shape.seq_len
+    seq_axes = None
+    if not shard_seq and _cache_gib(cfg, b, s, ctx, mesh) > 8.0:
+        # big-cache archs: shard the cache SEQUENCE over the model axis
+        # (distributed-softmax decode) instead of KV heads — the only
+        # layout where a 340B/32k/128-batch cache fits 16 GiB chips
+        ctx = dataclasses.replace(ctx, attn_sharded=False,
+                                  kv_repeat_factor=1)
+        seq_axes = ("model",)
+
+    def step(params, cache, token):
+        return tf.decode_step(params, cfg, cache, token)
+
+    with shd.sharding_context(ctx):
+        params = jax.eval_shape(
+            lambda: tf.init_lm(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+        cache = jax.eval_shape(
+            lambda: tf.init_cache(cfg, b, s, dtype=jnp.bfloat16))
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    pspec = shd.param_specs(cfg, mesh, params, fsdp=_infer_fsdp(cfg, mesh))
+    cspec = shd.cache_specs(cfg, ctx, cache, shard_seq=shard_seq,
+                            seq_axes=seq_axes)
+    bent = shd._batch_entry(ctx)
+    ndata = 1
+    for a in ctx.batch_axes:
+        ndata *= mesh.shape.get(a, 1)
+    tok_spec = P(bent) if b % max(ndata, 1) == 0 else P(None)
+    sh = lambda t: shd.shardings_from_specs(t, mesh)
+    mf = roof.lm_model_flops(cfg, "decode", s, b)
+    emb_tp = mesh.shape.get("model", 1)
+    logit_spec = P(bent if b % max(ndata, 1) == 0 else None,
+                   "model" if cfg.vocab_size % emb_tp == 0 else None)
+    out_sh = (NamedSharding(mesh, logit_spec), sh(cspec))
+    return Cell(arch, shape.name, _wrap_ctx(step, ctx),
+                (params, cache, token),
+                (sh(pspec), sh(cspec), NamedSharding(mesh, tok_spec)), mf,
+                ctx, out_shardings=out_sh)
+
+
+FNO_STRATEGY = "dp"  # "dp" (optimized: pure data-parallel, weights
+#                        replicated — they are tiny) | "tp" (baseline:
+#                        hidden dim sharded over model; §Perf compares)
+
+
+def _build_fno_train(arch, cfg, shape, mesh, strategy=None):
+    strategy = strategy or FNO_STRATEGY
+    ctx = shd.make_context(cfg, mesh, kind="train")
+    if strategy == "dp":
+        # batch over data×model: FNO weights are ~100k-130M params —
+        # replicating them removes every per-layer collective; only the
+        # (tiny) gradient all-reduce remains.
+        if "pod" in mesh.shape:
+            ctx = dataclasses.replace(ctx, batch_axes=("pod", "data"))
+        else:
+            ctx = dataclasses.replace(ctx, batch_axes=("data", "model"))
+    opt = _optimizer(arch)
+    step = ts.make_train_step(cfg, opt, fno_path="xla")
+    b = shape.global_batch
+    with shd.sharding_context(ctx):
+        params = jax.eval_shape(
+            lambda: fno_mod.init_fno(jax.random.PRNGKey(0), cfg))
+        opt_state = jax.eval_shape(opt.init, params)
+    batch = {
+        "x": jax.ShapeDtypeStruct((b, cfg.in_channels) + tuple(cfg.spatial),
+                                  jnp.float32),
+        "y": jax.ShapeDtypeStruct((b, cfg.out_channels) + tuple(cfg.spatial),
+                                  jnp.float32),
+    }
+    if strategy == "dp":
+        pspec = jax.tree_util.tree_map(
+            lambda l: P(*([None] * len(l.shape))), params)
+    else:
+        pspec = shd.param_specs(cfg, mesh, params)
+    ospec = {"m": pspec, "v": pspec, "step": P()}
+    bspec = shd.batch_specs(cfg, ctx, batch)
+    sh = lambda t: shd.shardings_from_specs(t, mesh)
+    mf = roof.fno_model_flops(cfg, b)
+    return Cell(arch, shape.name, _wrap_ctx(step, ctx),
+                (params, opt_state, batch),
+                (sh(pspec), sh(ospec), sh(bspec)), mf, ctx)

@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, print memory/cost analysis, and emit roofline rows.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh single --json out.json
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count at first init). Smoke tests / benches never import this module.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ALL_IDS, ARCH_IDS, FNO_IDS, SHAPES, skip_reason  # noqa: E402
+from repro.launch import cells as cells_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline import analysis as roof  # noqa: E402
+from repro.roofline import hw  # noqa: E402
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str, verbose: bool
+             ) -> dict:
+    t0 = time.time()
+    cell = cells_mod.build_cell(arch, shape, mesh)
+    # donate params/opt (train) or cache (decode): outputs alias inputs,
+    # as any real training/serving loop would run
+    donate = (0, 1) if len(cell.args) == 3 and shape != "decode_32k" and \
+        shape != "long_500k" else ((1,) if len(cell.args) == 3 else ())
+    kw = {}
+    if cell.out_shardings is not None:
+        kw["out_shardings"] = cell.out_shardings
+    jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                     donate_argnums=donate, **kw)
+    lowered = jitted.lower(*cell.args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    ma = compiled.memory_analysis()
+    r = roof.analyze(compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+                     chips=mesh.devices.size, model_flops=cell.model_flops)
+    per_chip = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "chips": mesh.devices.size,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "arg_bytes": ma.argument_size_in_bytes,
+        "out_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "hbm_per_chip_gib": round(per_chip / 2**30, 3),
+        "fits_hbm": bool(per_chip <= hw.HBM_BYTES),
+        "hlo_flops": r.hlo_flops,
+        "hlo_bytes": r.hlo_bytes,
+        "coll_bytes": r.coll_bytes,
+        "coll_detail": r.coll_detail,
+        "model_flops": r.model_flops,
+        "t_compute_ms": r.t_compute * 1e3,
+        "t_memory_ms": r.t_memory * 1e3,
+        "t_collective_ms": r.t_collective * 1e3,
+        "bottleneck": r.bottleneck,
+        "useful_flop_ratio": r.useful_flop_ratio,
+        "mfu_bound": r.mfu_bound,
+    }
+    if verbose:
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}"
+              f"GiB out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB per chip "
+              f"(fits 16GiB: {rec['fits_hbm']})")
+        print("  " + roof.HEADER)
+        print("  " + r.row())
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--json", default=None, help="append records to file")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dryrun needs 512 placeholder devices"
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single(16x16)", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi(2x16x16)", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS) + ["fno1d", "fno2d"]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    records, failures = [], []
+    for mesh_name, mesh in meshes:
+        # single-pod mesh uses 256 of the 512 devices
+        for arch in archs:
+            for shape in shapes:
+                reason = skip_reason(arch, shape)
+                if reason:
+                    records.append({"arch": arch, "shape": shape,
+                                    "mesh": mesh_name, "status": "skip",
+                                    "reason": reason})
+                    if not args.quiet:
+                        print(f"[skip] {arch} × {shape} × {mesh_name}: "
+                              f"{reason}")
+                    continue
+                if not args.quiet:
+                    print(f"[cell] {arch} × {shape} × {mesh_name} ...",
+                          flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh, mesh_name,
+                                   verbose=not args.quiet)
+                    records.append(rec)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    records.append({"arch": arch, "shape": shape,
+                                    "mesh": mesh_name, "status": "fail",
+                                    "error": repr(e)})
+
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+
+    ok = sum(1 for r in records if r.get("status") == "ok")
+    sk = sum(1 for r in records if r.get("status") == "skip")
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {len(failures)} failed")
+    for f in failures:
+        print("  FAIL:", *f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,179 @@
+"""GQA attention: blockwise online-softmax for train/prefill, dense single-
+token attention over the KV cache for decode.
+
+Memory posture (no Pallas here — the paper's kernels are the FNO ones):
+  * train/prefill: outer scan over query blocks, inner scan over KV blocks
+    with running (max, denom, acc) — peak score tensor is
+    [B, q_block, Hkv, G, kv_block] regardless of sequence length.
+  * sliding-window: per query block only the [window + q_block] KV slice is
+    gathered (dynamic_slice), so FLOPs/bytes scale O(S·W) not O(S²).
+  * full causal attention computes masked upper-triangle blocks (the usual
+    XLA-level 2× FLOP overcount vs. an ideal triangular kernel); recorded in
+    EXPERIMENTS.md §Roofline as part of MODEL_FLOPS/HLO_FLOPs.
+  * decode: one dense [B, H, 1, S] score row over the cache — linear in S.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_activation
+from repro.models.layers import dense, dense_init
+
+_NEG = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.d_attn, dtype, cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, cfg.d_kv, dtype, cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, cfg.d_kv, dtype, cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.d_attn, d, dtype, False),
+    }
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _score_penalty(pos_q, pos_k, causal: bool, window: int, kv_len=None):
+    """[Sq, Sk] additive f32 penalty (0 valid / -1e30 masked).
+
+    Added to scores rather than applied via jnp.where(mask, s, NEG): the
+    additive form is constant w.r.t. activations, so the backward pass
+    saves nothing — a where() would checkpoint a boolean tensor that XLA
+    hoists out of the layer scan broadcast to full score shape (gigabytes
+    at 4k context; observed on the 96-layer dry-run cell)."""
+    m = jnp.ones(pos_q.shape[-1:] + pos_k.shape[-1:], jnp.bool_)
+    pq, pk = pos_q[:, None], pos_k[None, :]
+    if causal:
+        m &= pk <= pq
+    if window > 0:
+        m &= pk > pq - window
+    if kv_len is not None:
+        m &= pk < kv_len
+    return jnp.where(m, 0.0, _NEG).astype(jnp.float32)
+
+
+def _attend_block(qb, ks, vs, pos_q, pos_k, causal, window, softcap,
+                  kv_len=None, kv_block: int = 512):
+    """Online-softmax attention of one query block against a KV slice.
+
+    qb: [B,Bq,Hkv,G,D]; ks/vs: [B,Sk,Hkv,D]. Returns [B,Bq,Hkv,G,D].
+    """
+    b, bq, hkv, g, dh = qb.shape
+    sk = ks.shape[1]
+    scale = dh ** -0.5
+    nkv = sk // kv_block
+    ks_b = ks.reshape(b, nkv, kv_block, hkv, dh)
+    vs_b = vs.reshape(b, nkv, kv_block, hkv, dh)
+    pk_b = pos_k.reshape(nkv, kv_block)
+    qf = qb.astype(jnp.float32) * scale
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pk = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(jnp.float32))
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        s = s + _score_penalty(pos_q, pk, causal, window, kv_len)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                vb.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, bq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, bq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (ks_b.swapaxes(0, 1), vs_b.swapaxes(0, 1), pk_b))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(qb.dtype)  # [B,Bq,Hkv,G,D]
+
+
+def _rup(v, m):
+    return (v + m - 1) // m * m
+
+
+def multihead_attention(q, k, v, *, causal: bool, window: int = 0,
+                        softcap: float = 0.0, q_offset: int = 0,
+                        q_block: int = 256, kv_block: int = 512):
+    """q: [B,Sq,Hq,D]; k/v: [B,Sk,Hkv,D] -> [B,Sq,Hq,D].
+
+    Positions are absolute: query i has position q_offset + i; key j has
+    position j. window>0 restricts to the last `window` keys (SWA).
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_block = min(q_block, sq)
+    while sq % q_block:
+        q_block //= 2
+    kv_block = min(kv_block, sk)
+    while sk % kv_block:
+        kv_block //= 2
+    nq = sq // q_block
+    qg = q.reshape(b, nq, q_block, hkv, g, dh)
+    pos_q_all = q_offset + jnp.arange(sq).reshape(nq, q_block)
+    pos_k = jnp.arange(sk)
+
+    use_window_slice = window > 0 and sk > _rup(window + q_block, kv_block)
+
+    if not use_window_slice:
+        def qbody(_, xs):
+            qb, pq = xs
+            o = _attend_block(qb, k, v, pq, pos_k, causal, window, softcap,
+                              kv_block=kv_block)
+            return None, o
+        _, out = jax.lax.scan(qbody, None, (qg.swapaxes(0, 1), pos_q_all))
+    else:
+        wlen = _rup(window + q_block, kv_block)
+
+        def qbody(_, xs):
+            qb, pq = xs
+            # last key this block can see is pq_max; slice [start, start+wlen)
+            start = jnp.clip(pq[-1] + 1 - wlen, 0, sk - wlen)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, wlen, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, wlen, axis=1)
+            pk = start + jnp.arange(wlen)
+            o = _attend_block(qb, ks, vs, pq, pk, causal, window, softcap,
+                              kv_block=kv_block)
+            return None, o
+        _, out = jax.lax.scan(qbody, None, (qg.swapaxes(0, 1), pos_q_all))
+
+    return out.swapaxes(0, 1).reshape(b, sq, hq, dh)
+
+
+def decode_attention_pos(q, k_cache, v_cache, pos_k, q_pos, *,
+                         window: int = 0, softcap: float = 0.0):
+    """Single-token attention over a (possibly ring) cache.
+
+    q: [B,1,Hq,D]; caches: [B,Sc,Hkv,D]; pos_k: [Sc] absolute token position
+    of each cache slot (< 0 = empty); q_pos: the query's absolute position.
+    Dense over Sc — O(cache size) per step.
+    """
+    b, _, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, dh).astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (pos_k >= 0) & (pos_k <= q_pos)
+    if window > 0:
+        valid &= pos_k > q_pos - window
+    s = s + jnp.where(valid, 0.0, _NEG).astype(jnp.float32)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, dh).astype(q.dtype)

@@ -1,0 +1,43 @@
+"""Modality frontend STUBS (per assignment: the transformer backbone is the
+deliverable; frontends provide precomputed embeddings).
+
+* audio (hubert): ``input_specs()`` supplies frame embeddings [B, T, d] — in
+  the real system these come from the conv waveform encoder.
+* vision (internvl2): patch embeddings [B, P, d] prepended to the token
+  sequence — in the real system these come from InternViT + the MLP
+  projector.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def frontend_inputs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the modality embeddings of one batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio":
+        return {"inputs_embeds":
+                jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)}
+    if cfg.frontend == "vision":
+        return {"prefix_embeds":
+                jax.ShapeDtypeStruct((b, cfg.num_prefix_embeds, cfg.d_model),
+                                     dtype)}
+    return {}
+
+
+def fake_frontend_arrays(cfg: ModelConfig, batch: int, seq: int, key,
+                         dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Random embeddings for smoke tests / examples."""
+    if cfg.frontend == "audio":
+        return {"inputs_embeds":
+                jax.random.normal(key, (batch, seq, cfg.d_model), dtype)}
+    if cfg.frontend == "vision":
+        return {"prefix_embeds": jax.random.normal(
+            key, (batch, cfg.num_prefix_embeds, cfg.d_model), dtype)}
+    return {}

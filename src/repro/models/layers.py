@@ -1,0 +1,102 @@
+"""Shared building blocks for the LM model zoo: norms, MLPs, RoPE, dense."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_activation
+
+
+def dense_init(key, din: int, dout: int, dtype, bias: bool = False):
+    scale = (1.0 / din) ** 0.5
+    p = {"w": scale * jax.random.normal(key, (din, dout), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- norms -------------------------------------------------------------------
+def norm_init(d: int, kind: str, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- MLP ---------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"wi": dense_init(ks[0], d, f, dtype),
+                "wg": dense_init(ks[1], d, f, dtype),
+                "wo": dense_init(ks[2], f, d, dtype)}
+    return {"wi": dense_init(ks[0], d, f, dtype),
+            "wo": dense_init(ks[2], f, d, dtype)}
+
+
+def apply_mlp(p, x, kind: str):
+    h = dense(p["wi"], x)
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x)) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense(p["wg"], x)) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(kind)
+    h = shard_activation(h, "ffn")
+    return dense(p["wo"], h)
+
+
+# -- RoPE --------------------------------------------------------------------
+def rope_frequencies(head_dim: int, fraction: float, base: float
+                     ) -> jnp.ndarray:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (base ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig
+               ) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (absolute). Rotates the first
+    `rope_fraction` of D pairwise (partial/2d RoPE keeps the tail as-is)."""
+    if cfg.rope_style == "none":
+        return x
+    inv = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_base)
+    rot = 2 * inv.shape[0]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B,S,rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([y.astype(x.dtype), x[..., rot:]], axis=-1)

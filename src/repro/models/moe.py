@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch never materializes the [T, E, C] one-hot (which at train_4k scale
+would be tens of GB): token→slot assignment is computed by a stable argsort
+over expert ids + per-expert prefix offsets, then a scatter into the
+[E, C, d] expert buffer. FLOPs therefore scale with *active* capacity, which
+keeps the dry-run cost_analysis honest for MoE archs (MODEL_FLOPS uses
+6·N_active·D).
+
+Expert-parallel sharding: the [E, C, d] buffer is sharded over the model
+axis when E divides it (arctic 128e); otherwise experts are replicated and
+TP shards the expert FFN dim (mixtral 8e on a 16-way axis) — see
+``distributed.sharding.param_specs``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_activation
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale = (1.0 / d) ** 0.5
+    experts = {
+        "wi": scale * jax.random.normal(ks[0], (e, d, f), dtype),
+        "wo": scale * jax.random.normal(ks[1], (e, f, d), dtype) / f ** 0.5 * d ** 0.5,
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        experts["wg"] = scale * jax.random.normal(ks[2], (e, d, f), dtype)
+    return {"router": dense_init(ks[3], d, e, dtype), "experts": experts}
+
+
+def _expert_ffn(experts: Dict, buf: jax.Array, kind: str) -> jax.Array:
+    """buf: [B, E, C, d] -> [B, E, C, d]; batched over experts."""
+    h = jnp.einsum("becd,edf->becf", buf, experts["wi"])
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, experts["wg"])) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, experts["wg"])) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    return jnp.einsum("becf,efd->becd", h, experts["wo"])
+
+
+def apply_moe(params, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux load-balance loss).
+
+    Dispatch is PER BATCH ROW: sort/offset/scatter indices never cross the
+    batch dim, so under pjit the whole dispatch stays sharded over the data
+    axis with no all-gathers (a global-token dispatch buffer replicated
+    per chip cost 21 GB/chip for mixtral prefill in the dry-run). Capacity
+    is per-row: C = ceil(S·k/E·cf).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    sk = s * k
+
+    logits = (x @ params["router"]["w"]).astype(jnp.float32)  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_logit, top_idx = jax.lax.top_k(logits, k)  # [B, S, k]
+    gates = jax.nn.softmax(top_logit, axis=-1).astype(x.dtype)
+
+    # load-balance aux (Switch): E * mean(load_frac * prob_frac)
+    load = jnp.zeros((e,), jnp.float32).at[top_idx.reshape(-1)].add(
+        1.0) / (b * sk)
+    importance = probs.mean((0, 1))
+    aux = e * jnp.sum(load * importance)
+
+    # ---- sort-based per-row dispatch -----------------------------------
+    cap = int(math.ceil(sk / e * cfg.capacity_factor))
+    cap = max(8, (cap + 7) // 8 * 8)
+    rows = jnp.arange(b)[:, None]
+    fe = top_idx.reshape(b, sk)
+    order = jnp.argsort(fe, axis=-1, stable=True)  # [B, sk]
+    fe_s = jnp.take_along_axis(fe, order, axis=-1)
+    tok_s = order // k  # source token within the row
+    counts = jnp.zeros((b, e), jnp.int32).at[rows, fe_s].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts  # exclusive prefix
+    slot = jnp.arange(sk)[None, :] - jnp.take_along_axis(starts, fe_s,
+                                                         axis=-1)
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, 0)
+
+    rows_b = jnp.broadcast_to(rows, (b, sk))
+    x_sorted = jnp.take_along_axis(x, tok_s[..., None], axis=1)  # [B,sk,d]
+    buf = jnp.zeros((b, e, cap, d), x.dtype)
+    buf = buf.at[rows_b, fe_s, slot_c].add(
+        jnp.where(keep[..., None], x_sorted, 0), mode="drop")
+    buf = shard_activation(buf, "experts")
+
+    out_buf = _expert_ffn(params["experts"], buf, cfg.mlp)
+    out_buf = shard_activation(out_buf, "experts")
+
+    y_s = out_buf[rows_b, fe_s, slot_c] * keep[..., None].astype(x.dtype)
+    # unsort back to [B, sk, d], weight by gates, sum over the k choices
+    y_flat = jnp.zeros((b, sk, d), x.dtype).at[rows_b, order].set(y_s)
+    y = (y_flat.reshape(b, s, k, d) * gates[..., None]).sum(axis=2)
+    return y, aux

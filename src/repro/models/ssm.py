@@ -1,0 +1,146 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked matmul formulation.
+
+Forward uses the SSD block decomposition (Dao & Gu 2024): intra-chunk
+"attention-like" term + inter-chunk state recurrence (a lax.scan over
+chunks), so all heavy compute is MXU-friendly einsums. Decode keeps an O(1)
+recurrent state per layer: (conv window, SSM state [H, N, P]).
+
+Simplifications vs. the reference CUDA implementation (DESIGN.md §5):
+ngroups = 1 (B/C shared across heads, matching the configs' param counts);
+the short causal conv + SiLU applies to the x branch only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_activation
+from repro.models.layers import apply_norm, dense_init, norm_init
+
+_MIN_DT = 1e-4
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_x": dense_init(ks[0], d, di, dtype),
+        "in_z": dense_init(ks[1], d, di, dtype),
+        "in_b": dense_init(ks[2], d, n, dtype),
+        "in_c": dense_init(ks[3], d, n, dtype),
+        "in_dt": dense_init(ks[4], d, h, dtype, bias=True),
+        "conv_w": 0.1 * jax.random.normal(ks[5], (cfg.ssm_conv_width, di),
+                                          dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "d": jnp.ones((h,), dtype),
+        "norm": norm_init(di, "rmsnorm", dtype),
+        "out": dense_init(ks[6], di, d, dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 init_state: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq. x: [B,S,di]; w: [K,di].
+
+    Returns (y [B,S,di], final window [B,K-1,di])."""
+    kw = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(kw))
+    return y, xp[:, -(kw - 1):] if kw > 1 else init_state
+
+
+def _proj_inputs(p, x, cfg: ModelConfig, conv_state=None):
+    xb = x @ p["in_x"]["w"]
+    z = x @ p["in_z"]["w"]
+    b_ = (x @ p["in_b"]["w"]).astype(jnp.float32)
+    c_ = (x @ p["in_c"]["w"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x @ p["in_dt"]["w"]).astype(jnp.float32) + p["in_dt"]["b"]) + _MIN_DT
+    xb, conv_out = _causal_conv(xb, p["conv_w"], conv_state)
+    xb = jax.nn.silu(xb)
+    xb = shard_activation(xb, "ssm_inner")
+    return xb, z, b_, c_, dt, conv_out
+
+
+def ssd_forward(p, x: jax.Array, cfg: ModelConfig,
+                return_state: bool = False):
+    """x: [B, S, d] -> y [B, S, d] (and final (conv, ssm) states)."""
+    b, s, _ = x.shape
+    hh, pp, nn = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    xb, z, b_, c_, dt, conv_fin = _proj_inputs(p, x, cfg)
+    xh = xb.reshape(b, nc, q, hh, pp).astype(jnp.float32)
+    bch = b_.reshape(b, nc, q, nn)
+    cch = c_.reshape(b, nc, q, nn)
+    dtc = dt.reshape(b, nc, q, hh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H]
+    da = dtc * a  # [B,nc,Q,H]
+    cum = jnp.cumsum(da, axis=2)  # inclusive within chunk
+    xdt = xh * dtc[..., None]
+
+    # intra-chunk: Y[i] += C_i·B_j · exp(cum_i - cum_j) · xdt_j  (j <= i)
+    gb = jnp.einsum("bcin,bcjn->bcij", cch, bch)  # [B,nc,Q,Q]
+    li = cum[:, :, :, None, :]  # i index
+    lj = cum[:, :, None, :, :]  # j index
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of the masked (j>i) entries would overflow and
+    # poison gradients (inf·0 = NaN in the backward pass)
+    m = jnp.exp(jnp.where(tri, li - lj, -jnp.inf))
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", gb, m, xdt)
+
+    # chunk-final local states: S_c = Σ_j exp(cum_last - cum_j) B_j ⊗ xdt_j
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    s_loc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", dec_out, bch, xdt)
+
+    # inter-chunk recurrence over chunks
+    dec_chunk = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+
+    def body(hprev, xs):
+        dc, sl = xs  # dc [B,H], sl [B,H,N,P]
+        return dc[..., None, None] * hprev + sl, hprev
+
+    h0 = jnp.zeros((b, hh, nn, pp), jnp.float32)
+    h_fin, h_before = jax.lax.scan(
+        body, h0, (dec_chunk.swapaxes(0, 1), s_loc.swapaxes(0, 1)))
+    h_before = h_before.swapaxes(0, 1)  # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cch, jnp.exp(cum),
+                         h_before)
+    y = y_intra + y_inter + p["d"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(b, s, -1)
+    y = apply_norm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                               ).astype(x.dtype), "rmsnorm")
+    out = y @ p["out"]["w"]
+    if return_state:
+        return out, (conv_fin, h_fin.astype(jnp.float32))
+    return out
+
+
+def ssd_decode_step(p, x: jax.Array, state: Tuple[jax.Array, jax.Array],
+                    cfg: ModelConfig):
+    """One-token recurrent step. x: [B, 1, d]; state = (conv [B,K-1,di],
+    h [B,H,N,P]). Returns (y [B,1,d], new state)."""
+    conv_state, h = state
+    hh, pp = cfg.ssm_heads, cfg.ssm_head_dim
+    xb, z, b_, c_, dt, conv_new = _proj_inputs(p, x, cfg, conv_state)
+    xh = xb.reshape(x.shape[0], hh, pp).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0] * a)  # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0], b_[:, 0], xh)
+    h_new = da[..., None, None] * h + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_[:, 0], h_new)
+    y = y + p["d"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(x.shape[0], 1, -1)
+    y = apply_norm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                               ).astype(x.dtype), "rmsnorm")
+    return y @ p["out"]["w"], (conv_new, h_new)

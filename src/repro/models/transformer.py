@@ -1,0 +1,448 @@
+"""Unified LM-family transformer: one implementation, ten architectures.
+
+Heterogeneous layer patterns (gemma3's 5 local : 1 global, hymba's three
+global layers) are handled by grouping consecutive same-kind layers into
+SEGMENTS: within a segment the attention window is static, so jax.lax.scan
+runs over the segment's stacked params and sliding-window layers get the
+O(S·W) dynamic-slice attention path (models/attention.py).
+
+KV caches are per-segment: sliding-window segments use RING buffers of size
+~window (so a 500k-context mixtral decode reads 4k keys/layer, not 500k),
+full-attention segments use full-length buffers. SSM layers carry O(1)
+recurrent state. Cache pytree:
+
+    {"segments": [ {"k","v": [nl,B,Sc,Hkv,D]} | {"conv","ssm": ...} | both ],
+     "len": int32 }
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import current_context, shard_activation
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, apply_rope, dense,
+                                 dense_init, mlp_init, norm_init)
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+def layer_flags(cfg: ModelConfig) -> List[bool]:
+    """Per-layer is_global flag (True = full attention, no window)."""
+    n = cfg.num_layers
+    if not cfg.has_attention or cfg.attention in ("full", "bidirectional"):
+        return [True] * n
+    if cfg.attention == "local_global":
+        per = cfg.local_per_global + 1
+        return [(i % per) == cfg.local_per_global for i in range(n)]
+    # swa: windowed everywhere except explicit global layers
+    return [i in cfg.global_layers for i in range(n)]
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[int, int, bool]]:
+    """Contiguous (start, end, is_global) runs of layers."""
+    flags = layer_flags(cfg)
+    segs, s = [], 0
+    for i in range(1, cfg.num_layers + 1):
+        if i == cfg.num_layers or flags[i] != flags[s]:
+            segs.append((s, i, flags[s]))
+            s = i
+    return segs
+
+
+def _tree_slice(tree, s, e):
+    return jax.tree_util.tree_map(lambda a: a[s:e], tree)
+
+
+def _rup(v, m):
+    return (v + m - 1) // m * m
+
+
+def ring_size(cfg: ModelConfig, is_global: bool, max_len: int) -> int:
+    if is_global or cfg.window_size <= 0:
+        return max_len
+    return min(max_len, _rup(cfg.window_size + 1, 128))
+
+
+def _kv_rep() -> int:
+    """KV-head replication factor for TP (1 outside a sharding context)."""
+    ctx = current_context()
+    return ctx.kv_repeat_factor if ctx else 1
+
+
+def effective_kv_heads(cfg: ModelConfig) -> int:
+    return cfg.num_kv_heads * _kv_rep()
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_lm(key: jax.Array, cfg: ModelConfig, dtype=None) -> Dict[str, Any]:
+    cfg.validate()
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kemb, klay, khead = jax.random.split(key, 3)
+
+    def init_layer(k):
+        ks = jax.random.split(k, 4)
+        lp: Dict[str, Any] = {"ln1": norm_init(cfg.d_model, cfg.norm, dtype)}
+        if cfg.has_attention:
+            lp["attn"] = attn.attn_init(ks[0], cfg, dtype)
+        if cfg.has_ssm:
+            lp["ssm"] = ssm_mod.ssm_init(ks[1], cfg, dtype)
+        if cfg.d_ff > 0:
+            if cfg.num_experts:
+                lp["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+                if cfg.dense_residual:
+                    lp["mlp"] = mlp_init(ks[3], cfg, dtype)
+            else:
+                lp["mlp"] = mlp_init(ks[3], cfg, dtype)
+            lp["ln2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        return lp
+
+    params = {
+        "embed": (1.0 / cfg.d_model ** 0.5) * jax.random.normal(
+            kemb, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": jax.vmap(init_layer)(
+            jax.random.split(klay, cfg.num_layers)),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(khead, cfg.d_model, cfg.vocab_size,
+                                       dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+def _attn_sublayer(lp, h, cfg: ModelConfig, positions, *, window: int,
+                   q_block: int, kv_block: int):
+    b, s, _ = h.shape
+    q = dense(lp["wq"], h).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = dense(lp["wk"], h).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(lp["wv"], h).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    r = _kv_rep()
+    if r > 1:  # replicate KV heads so each TP shard owns whole heads
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    q = shard_activation(q, "heads")
+    k = shard_activation(k, "kv")
+    v = shard_activation(v, "kv")
+    o = attn.multihead_attention(
+        q, k, v, causal=cfg.is_decoder, window=window,
+        softcap=cfg.logit_softcap, q_block=q_block, kv_block=kv_block)
+    out = dense(lp["wo"], o.reshape(b, s, -1))
+    return out, (k, v)
+
+
+def _mlp_sublayer(lp, x, cfg: ModelConfig):
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff <= 0:
+        return jnp.zeros_like(x), aux
+    h2 = apply_norm(lp["ln2"], x, cfg.norm)
+    if cfg.num_experts:
+        y, aux = moe_mod.apply_moe(lp["moe"], h2, cfg)
+        if cfg.dense_residual:
+            y = y + apply_mlp(lp["mlp"], h2, cfg.mlp)
+    else:
+        y = apply_mlp(lp["mlp"], h2, cfg.mlp)
+    return y, aux
+
+
+def _layer_fwd(lp, x, cfg: ModelConfig, positions, *, window: int,
+               q_block: int = 256, kv_block: int = 512,
+               want_state: bool = False):
+    """Full-sequence layer. Returns (x', aux, (k, v), ssm_state)."""
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    parts, kv, ssm_state = [], None, None
+    if cfg.has_attention:
+        o, kv = _attn_sublayer(lp["attn"], h, cfg, positions, window=window,
+                               q_block=q_block, kv_block=kv_block)
+        parts.append(o)
+    if cfg.has_ssm:
+        if want_state:
+            o, ssm_state = ssm_mod.ssd_forward(lp["ssm"], h, cfg,
+                                               return_state=True)
+        else:
+            o = ssm_mod.ssd_forward(lp["ssm"], h, cfg)
+        parts.append(o)
+    mix = sum(parts) / len(parts) if cfg.hybrid_parallel else sum(parts)
+    x = x + mix
+    y, aux = _mlp_sublayer(lp, x, cfg)
+    x = x + y
+    x = shard_activation(x, "embed")
+    return x, aux, kv, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def embed_inputs(params, cfg: ModelConfig, tokens=None, inputs_embeds=None,
+                 prefix_embeds=None) -> jax.Array:
+    if inputs_embeds is not None:
+        x = inputs_embeds
+    else:
+        x = params["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return shard_activation(x, "embed")
+
+
+def lm_logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = dense(params["lm_head"], x)
+    return shard_activation(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens=None, inputs_embeds=None,
+            prefix_embeds=None, q_block: int = 256, kv_block: int = 512,
+            remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits [B,S,V], moe aux loss).
+
+    remat=True checkpoints each layer (recompute in backward) — the
+    standard memory/FLOP trade for the big assigned archs at train_4k.
+    """
+    x = embed_inputs(params, cfg, tokens, inputs_embeds, prefix_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for (s, e, is_global) in segments(cfg):
+        window = 0 if is_global else cfg.window_size
+        sub = _tree_slice(params["layers"], s, e)
+
+        def one_layer(lp, xx, window=window):
+            return _layer_fwd(lp, xx, cfg, positions, window=window,
+                              q_block=q_block, kv_block=kv_block)[:2]
+
+        if remat:
+            one_layer = jax.checkpoint(
+                one_layer,
+                policy=jax.checkpoint_policies.nothing_saveable)
+
+        if e - s == 1:
+            lp = jax.tree_util.tree_map(lambda a: a[0], sub)
+            x, aux = one_layer(lp, x)
+            aux_total += aux
+        else:
+            def body(carry, lp):
+                xx, acc = carry
+                xx, aux = one_layer(lp, xx)
+                return (xx, acc + aux), None
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), sub)
+
+    return lm_logits(params, cfg, x), aux_total
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            aux_coef: float = 0.01, remat: bool = False) -> jax.Array:
+    """batch: tokens [B,S], labels [B,S] (-1 = ignore), optional
+    inputs_embeds / prefix_embeds."""
+    logits, aux = forward(
+        params, cfg, batch.get("tokens"), batch.get("inputs_embeds"),
+        batch.get("prefix_embeds"), remat=remat)
+    labels = batch["labels"]
+    npad = logits.shape[1] - labels.shape[1]
+    if npad:  # prefix embeds: no loss on prefix positions
+        logits = logits[:, npad:]
+    mask = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    # logsumexp - gather form: never materializes a full-vocab f32
+    # log_softmax tensor (at 150k vocab that array dominates HBM)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = lse - tgt.astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss + aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None
+               ) -> Dict[str, Any]:
+    """Zero cache sized for `max_len` total positions."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    segs = []
+    for (s, e, is_global) in segments(cfg):
+        nl = e - s
+        seg: Dict[str, Any] = {}
+        if cfg.has_attention:
+            sc = ring_size(cfg, is_global, max_len)
+            kv_shape = (nl, batch, sc, effective_kv_heads(cfg), cfg.head_dim)
+            seg["k"] = jnp.zeros(kv_shape, dtype)
+            seg["v"] = jnp.zeros(kv_shape, dtype)
+        if cfg.has_ssm:
+            seg["conv"] = jnp.zeros(
+                (nl, batch, cfg.ssm_conv_width - 1, cfg.d_inner), dtype)
+            seg["ssm"] = jnp.zeros(
+                (nl, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                jnp.float32)
+        segs.append(seg)
+    return {"segments": segs, "len": jnp.zeros((), jnp.int32)}
+
+
+def _to_ring(k: jax.Array, sc: int) -> jax.Array:
+    """[B,S,...] full keys -> ring buffer [B,Sc,...] (token p at slot p%Sc)."""
+    s = k.shape[1]
+    if s <= sc:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, sc - s)
+        return jnp.pad(k, pad)
+    return jnp.roll(k[:, -sc:], s % sc, axis=1)
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, inputs_embeds=None,
+            prefix_embeds=None, max_len: Optional[int] = None,
+            q_block: int = 256, kv_block: int = 512
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Returns (logits for the LAST position [B,V], populated cache)."""
+    x = embed_inputs(params, cfg, tokens, inputs_embeds, prefix_embeds)
+    b, s = x.shape[:2]
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    segs_out = []
+
+    for (st, en, is_global) in segments(cfg):
+        window = 0 if is_global else cfg.window_size
+        sub = _tree_slice(params["layers"], st, en)
+
+        def body(xx, lp):
+            xx, _, kv, ssm_state = _layer_fwd(
+                lp, xx, cfg, positions, window=window, q_block=q_block,
+                kv_block=kv_block, want_state=True)
+            outs = {}
+            if kv is not None:
+                outs["k"], outs["v"] = kv
+            if ssm_state is not None:
+                outs["conv"], outs["ssm"] = ssm_state
+            return xx, outs
+
+        x, outs = jax.lax.scan(body, x, sub)
+        seg: Dict[str, Any] = {}
+        if "k" in outs:
+            sc = ring_size(cfg, is_global, max_len)
+            seg["k"] = jax.vmap(lambda kk: _to_ring(kk, sc))(outs["k"])
+            seg["v"] = jax.vmap(lambda vv: _to_ring(vv, sc))(outs["v"])
+        if "ssm" in outs:
+            seg["conv"] = outs["conv"]
+            seg["ssm"] = outs["ssm"]
+        segs_out.append(seg)
+
+    logits = lm_logits(params, cfg, x[:, -1:])
+    return logits[:, 0], {"segments": segs_out,
+                          "len": jnp.asarray(s, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _ring_positions(sc: int, cur_len) -> jax.Array:
+    """Absolute token position held by each ring slot AFTER writing the
+    token at position cur_len into slot cur_len % sc. Empty slots < 0."""
+    idx = jnp.arange(sc)
+    p = cur_len - (cur_len - idx) % sc
+    return jnp.where(p <= cur_len, p, p - sc)
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any],
+                token: Optional[jax.Array] = None,
+                token_embeds: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step. token: [B] int32 (or token_embeds [B,1,D]).
+    Returns (logits [B,V], updated cache).
+
+    The per-segment layer loop is a fori_loop whose CARRY holds the
+    stacked cache arrays, updated in place by one dynamic-update-slice per
+    layer — a lax.scan with the cache as xs/ys double-buffers it (2x KV
+    memory on every decode cell in the dry-run)."""
+    cur = cache["len"]  # new token's position
+    if token_embeds is not None:
+        x = token_embeds
+    else:
+        x = params["embed"][token][:, None]
+    x = shard_activation(x, "embed")
+    b = x.shape[0]
+    positions = jnp.broadcast_to(cur, (b, 1))
+    new_segs = []
+
+    for seg_i, (st, en, is_global) in enumerate(segments(cfg)):
+        window = 0 if is_global else cfg.window_size
+        sub = _tree_slice(params["layers"], st, en)
+        seg_cache = dict(cache["segments"][seg_i])
+
+        def body(i, carry):
+            xx, sc_ = carry
+            sc_ = dict(sc_)
+            lp = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False), sub)
+            h = apply_norm(lp["ln1"], xx, cfg.norm)
+            parts = []
+            if cfg.has_attention:
+                ap = lp["attn"]
+                q = dense(ap["wq"], h).reshape(b, 1, cfg.num_heads,
+                                               cfg.head_dim)
+                k = dense(ap["wk"], h).reshape(b, 1, cfg.num_kv_heads,
+                                               cfg.head_dim)
+                v = dense(ap["wv"], h).reshape(b, 1, cfg.num_kv_heads,
+                                               cfg.head_dim)
+                q = apply_rope(q, positions, cfg)
+                k = apply_rope(k, positions, cfg)
+                r = _kv_rep()
+                if r > 1:
+                    k = jnp.repeat(k, r, axis=2)
+                    v = jnp.repeat(v, r, axis=2)
+                q = shard_activation(q, "heads")
+                scap = sc_["k"].shape[2]
+                slot = cur % scap
+                zero = jnp.zeros((), jnp.int32)
+                # in-place single-slot write into the stacked cache
+                sc_["k"] = jax.lax.dynamic_update_slice(
+                    sc_["k"], k.astype(sc_["k"].dtype)[None],
+                    (i, zero, slot, zero, zero))
+                sc_["v"] = jax.lax.dynamic_update_slice(
+                    sc_["v"], v.astype(sc_["v"].dtype)[None],
+                    (i, zero, slot, zero, zero))
+                k_cache = jax.lax.dynamic_index_in_dim(sc_["k"], i, 0, False)
+                v_cache = jax.lax.dynamic_index_in_dim(sc_["v"], i, 0, False)
+                pos_k = _ring_positions(scap, cur)
+                o = attn.decode_attention_pos(
+                    q, k_cache, v_cache, pos_k, cur, window=window,
+                    softcap=cfg.logit_softcap)
+                parts.append(dense(ap["wo"], o.reshape(b, 1, -1)))
+            if cfg.has_ssm:
+                conv_i = jax.lax.dynamic_index_in_dim(sc_["conv"], i, 0,
+                                                      False)
+                ssm_i = jax.lax.dynamic_index_in_dim(sc_["ssm"], i, 0, False)
+                o, (conv_new, ssm_new) = ssm_mod.ssd_decode_step(
+                    lp["ssm"], h, (conv_i, ssm_i), cfg)
+                parts.append(o)
+                sc_["conv"] = jax.lax.dynamic_update_index_in_dim(
+                    sc_["conv"], conv_new.astype(sc_["conv"].dtype), i, 0)
+                sc_["ssm"] = jax.lax.dynamic_update_index_in_dim(
+                    sc_["ssm"], ssm_new.astype(sc_["ssm"].dtype), i, 0)
+            mix = (sum(parts) / len(parts) if cfg.hybrid_parallel
+                   else sum(parts))
+            xx = xx + mix
+            y, _ = _mlp_sublayer(lp, xx, cfg)
+            return (xx + y, sc_)
+
+        x, seg_cache = jax.lax.fori_loop(0, en - st, body, (x, seg_cache))
+        new_segs.append(seg_cache)
+
+    logits = lm_logits(params, cfg, x)
+    return logits[:, 0], {"segments": new_segs, "len": cur + 1}

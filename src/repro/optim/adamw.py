@@ -1,0 +1,76 @@
+"""AdamW with global-norm clipping, written from scratch.
+
+State dtype is configurable: large archs (nemotron-340b, arctic-480b) keep
+bf16 first/second moments so optimizer state fits the per-chip HBM budget at
+256 chips (EXPERIMENTS.md §Dry-run records the arithmetic). Update math is
+always f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_map(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Optional[str] = None  # None = like params; else e.g. bf16
+
+    def init(self, params) -> Dict[str, Any]:
+        dt = (lambda p: p.dtype) if self.state_dtype is None else (
+            lambda p: jnp.dtype(self.state_dtype))
+        zeros = lambda p: jnp.zeros(p.shape, dt(p))
+        return {"m": _tree_map(zeros, params),
+                "v": _tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params
+               ) -> Tuple[Any, Dict[str, Any]]:
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+            if self.clip_norm else 1.0
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m32 / c1
+            vhat = v32 / c2
+            step_ = mhat / (jnp.sqrt(vhat) + self.eps)
+            newp = (p.astype(jnp.float32)
+                    - lr * (step_ + self.weight_decay * p.astype(jnp.float32)))
+            return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+        out = _tree_map(upd, grads, state["m"], state["v"], params)
+        new_p = _tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = _tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = _tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def adamw(peak_lr: float = 3e-4, **kw) -> AdamW:
+    from repro.optim.schedule import constant
+    return AdamW(lr=constant(peak_lr), **kw)

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (from scratch; no optax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac·peak."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return lr
+
+
+def constant(lr_value: float):
+    return lambda step: jnp.asarray(lr_value, jnp.float32)

@@ -1,0 +1,187 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` on the partitioned module reports per-chip flops/bytes.
+Collective bytes are NOT in cost_analysis: we parse the post-SPMD HLO text
+and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (shapes in the partitioned
+module are already per-shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-chip bytes moved by each collective type (result-shape sizes)."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2)
+        op = m.group(3)
+        out[op] = out.get(op, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per chip
+    hlo_bytes: float  # per chip
+    coll_bytes: float  # per chip
+    coll_detail: Dict[str, int]
+    model_flops: float  # whole-step useful FLOPs (6ND etc.), global
+    temp_bytes: int = 0
+    arg_bytes: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / hw.ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / (chips · HLO_FLOPs): remat/masking/dispatch waste."""
+        denom = self.chips * self.hlo_flops
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOP utilization achievable at the roofline bound."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / t) / hw.PEAK_FLOPS_BF16
+
+    def row(self) -> str:
+        d = self.coll_detail
+        det = ",".join(f"{k[:2]}:{v/2**20:.0f}M" for k, v in sorted(d.items()))
+        return (f"{self.arch:16s} {self.shape:12s} {self.mesh:9s} "
+                f"{self.t_compute*1e3:9.2f} {self.t_memory*1e3:9.2f} "
+                f"{self.t_collective*1e3:9.2f} {self.bottleneck:10s} "
+                f"{self.useful_flop_ratio:7.3f} {self.mfu_bound:6.3f}  {det}")
+
+
+HEADER = (f"{'arch':16s} {'shape':12s} {'mesh':9s} {'comp_ms':>9s} "
+          f"{'mem_ms':>9s} {'coll_ms':>9s} {'bottleneck':10s} "
+          f"{'useful':>7s} {'MFU<=':>6s}  collectives")
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float) -> Roofline:
+    """Roofline terms from the compiled per-device module.
+
+    Uses the multiplicity-aware HLO counter (roofline/hlo_counter.py):
+    XLA's cost_analysis counts while-loop bodies once, understating both
+    FLOPs and in-loop collective bytes for scan-over-layers models.
+    """
+    from repro.roofline import hlo_counter as hc
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    counts = hc.count(txt)
+    coll = {k: int(v) for k, v in counts.coll_bytes.items()}
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=float(counts.flops),
+        hlo_bytes=float(counts.bytes),
+        coll_bytes=float(sum(coll.values())),
+        coll_detail=coll,
+        model_flops=model_flops,
+        temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+        arg_bytes=getattr(ma, "argument_size_in_bytes", 0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful-work) estimates
+# ---------------------------------------------------------------------------
+def lm_model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int
+                   ) -> float:
+    """6·N_active·tokens for train, 2·N_active·tokens for inference."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = global_batch * (seq_len if shape_kind != "decode" else 1)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def fno_model_flops(cfg, batch: int) -> float:
+    """Exact useful FLOPs of the truncated-DFT FNO layer algebra
+    (DESIGN.md §3.3), per batch element, ×3 for fwd+bwd (train step).
+
+    1D (x [H,N], modes K):   rDFT 4·H·N·K | CGEMM 8·K·H·O | irDFT 4·O·N·K
+    2D (x [H,X,Y], KX,KY):   rDFT_Y 4·H·X·Y·KY | cDFT_X 8·H·KY·X·KX |
+                             CGEMM 8·KX·KY·H·O | icDFT_X 8·O·KY·KX·X |
+                             irDFT_Y 4·O·X·KY·Y
+    """
+    import math
+    h = o = cfg.hidden
+    sp = math.prod(cfg.spatial)
+    lift = cfg.lifting_dim or 2 * h
+    if cfg.ndim == 1:
+        (n,), (k,) = cfg.spatial, cfg.modes
+        spectral = 4 * h * n * k + 8 * k * h * o + 4 * o * n * k
+    else:
+        (nx, ny), (kx, ky) = cfg.spatial, cfg.modes
+        spectral = (4 * h * nx * ny * ky + 8 * h * ky * nx * kx
+                    + 8 * kx * ky * h * o + 8 * o * ky * kx * nx
+                    + 4 * o * nx * ky * ny)
+    if cfg.weight_mode == "per_mode":
+        pass  # CGEMM term identical per mode (already counted per-mode)
+    per_layer = spectral + 2 * sp * h * o  # + bypass 1x1
+    lifting = 2 * sp * (cfg.in_channels * lift + lift * h)
+    proj = 2 * sp * (h * lift + lift * cfg.out_channels)
+    fwd = batch * (cfg.num_layers * per_layer + lifting + proj)
+    return 3.0 * fwd  # train step

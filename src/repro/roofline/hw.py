@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (per chip) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_LINK_BW = 50e9  # B/s per link
+HBM_BYTES = 16 * 2 ** 30  # 16 GiB per chip

@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL records.
+
+    PYTHONPATH=src python -m repro.roofline.report /tmp/dryrun_single.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(paths: List[str]) -> List[Dict]:
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                if line.strip():
+                    recs.append(json.loads(line))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 2 ** 30:
+        return f"{b / 2**30:.2f}G"
+    if b >= 2 ** 20:
+        return f"{b / 2**20:.1f}M"
+    return f"{b / 2**10:.0f}K"
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | compute ms | memory ms | coll ms | "
+            "bottleneck | HBM GiB/chip | useful | MFU≤ | collectives |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"— | — | — | SKIP: {r['reason']} | | | | |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"— | — | — | FAIL | | | | {r.get('error','')[:60]} |")
+            continue
+        det = ",".join(f"{k[:6]}:{fmt_bytes(v)}"
+                       for k, v in sorted(r["coll_detail"].items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_ms']:.2f} | {r['t_memory_ms']:.2f} | "
+            f"{r['t_collective_ms']:.2f} | **{r['bottleneck']}** | "
+            f"{r['hbm_per_chip_gib']:.2f} | {r['useful_flop_ratio']:.3f} | "
+            f"{r['mfu_bound']:.3f} | {det} |")
+    return "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    sk = [r for r in recs if r.get("status") == "skip"]
+    fail = [r for r in recs if r.get("status") == "fail"]
+    lines = [f"{len(ok)} compiled, {len(sk)} skipped, {len(fail)} failed."]
+    if ok:
+        worst = sorted(ok, key=lambda r: r["mfu_bound"])[:3]
+        lines.append("worst MFU-bound cells: " + ", ".join(
+            f"{r['arch']}×{r['shape']} ({r['mfu_bound']:.3f})"
+            for r in worst))
+        collb = [r for r in ok if r["bottleneck"] == "collective"]
+        lines.append(f"collective-bound cells: "
+                     + (", ".join(f"{r['arch']}×{r['shape']}"
+                                  for r in collb) or "none"))
+        nofit = [r for r in ok if not r["fits_hbm"]]
+        if nofit:
+            lines.append("OVER HBM: " + ", ".join(
+                f"{r['arch']}×{r['shape']} ({r['hbm_per_chip_gib']:.1f}GiB)"
+                for r in nofit))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = load(sys.argv[1:])
+    print(summary(recs))
+    print()
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

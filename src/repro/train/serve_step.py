@@ -1,0 +1,45 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``prefill_step`` lowers for the *inference-prefill* shape cells;
+``decode_step`` (one new token against a populated KV cache of seq_len) for
+the *decode* cells, per the assignment's shape semantics.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return tf.prefill(params, cfg, batch.get("tokens"),
+                          batch.get("inputs_embeds"),
+                          batch.get("prefix_embeds"), max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, sample: bool = False,
+                     temperature: float = 1.0):
+    def decode_step(params, cache, token, key=None):
+        logits, cache = tf.decode_step(params, cfg, cache, token)
+        if sample:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, cache
+    return decode_step
+
+
+def make_encoder_step(cfg: ModelConfig):
+    """Encoder-only (hubert) 'serving' = one bidirectional forward."""
+    def encoder_step(params, batch):
+        logits, _ = tf.forward(params, cfg, batch.get("tokens"),
+                               batch.get("inputs_embeds"),
+                               batch.get("prefix_embeds"))
+        return logits
+    return encoder_step

@@ -1,0 +1,94 @@
+"""Blockwise attention vs dense reference: GQA, causal, SWA, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+
+
+def dense_ref(q, k, v, causal, window, q_offset=0):
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, sq, hkv, g, d).astype(np.float32)
+    s = np.einsum("bqhgd,bkhd->bhgqk", qf, np.asarray(k, np.float32))
+    s = s / np.sqrt(d)
+    pos_q = q_offset + np.arange(sq)
+    pos_k = np.arange(sk)
+    mask = np.ones((sq, sk), bool)
+    if causal:
+        mask &= pos_k[None] <= pos_q[:, None]
+    if window > 0:
+        mask &= pos_k[None] > pos_q[:, None] - window
+    s = np.where(mask[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bhgqk,bkhd->bhgqd", p, np.asarray(v, np.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+
+
+CASES = [
+    # hq, hkv, causal, window, sq, sk
+    (8, 8, True, 0, 64, 64),
+    (8, 2, True, 0, 64, 64),  # GQA
+    (4, 4, False, 0, 128, 128),  # bidirectional
+    (8, 2, True, 16, 128, 128),  # SWA (dynamic-slice path)
+    (6, 2, True, 24, 256, 256),  # SWA non-pow2 window
+]
+
+
+@pytest.mark.parametrize("hq,hkv,causal,window,sq,sk", CASES)
+def test_blockwise_vs_dense(hq, hkv, causal, window, sq, sk):
+    rng = np.random.default_rng(hq * sq + window)
+    d = 16
+    q = jnp.asarray(rng.normal(size=(2, sq, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, sk, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, sk, hkv, d)), jnp.float32)
+    out = attn.multihead_attention(q, k, v, causal=causal, window=window,
+                                   q_block=32, kv_block=32)
+    ref = dense_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_last_row():
+    """decode_attention_pos == last row of full causal attention."""
+    rng = np.random.default_rng(3)
+    b, s, hq, hkv, d = 2, 33, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    full = dense_ref(q, k, v, True, 0)
+    # cache with padding slots beyond s
+    smax = 48
+    pad = smax - s
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pos_k = jnp.where(jnp.arange(smax) < s, jnp.arange(smax), -1)
+    out = attn.decode_attention_pos(q[:, -1:], kc, vc, pos_k, s - 1)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), full[:, -1],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_ring_window():
+    """Ring-buffer decode == full-cache windowed decode."""
+    rng = np.random.default_rng(4)
+    b, hkv, hq, d, w = 1, 2, 4, 8, 16
+    total = 40  # tokens seen so far; new token position = total
+    k_all = jnp.asarray(rng.normal(size=(b, total + 1, hkv, d)), jnp.float32)
+    v_all = jnp.asarray(rng.normal(size=(b, total + 1, hkv, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, d)), jnp.float32)
+    # full-cache reference
+    pos_full = jnp.arange(total + 1)
+    ref = attn.decode_attention_pos(q, k_all, v_all, pos_full, total,
+                                    window=w)
+    # ring cache of size sc >= w+1, holding the last sc tokens
+    sc = 24
+    idx = jnp.arange(total + 1 - sc, total + 1)
+    slots = idx % sc
+    kr = jnp.zeros((b, sc, hkv, d)).at[:, slots].set(k_all[:, idx])
+    vr = jnp.zeros((b, sc, hkv, d)).at[:, slots].set(v_all[:, idx])
+    pos_ring = jnp.zeros(sc, jnp.int32).at[slots].set(idx)
+    out = attn.decode_attention_pos(q, kr, vr, pos_ring, total, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)

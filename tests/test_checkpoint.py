@@ -1,0 +1,63 @@
+"""Checkpointer: roundtrip, async, GC, corruption detection, trainer
+restart semantics."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6).reshape(2, 3),
+                       "c": [jnp.ones(3), jnp.zeros((2, 2))]}}
+
+
+def test_roundtrip():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(5, t)
+        assert ck.latest_step() == 5
+        out = ck.restore(5, jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t))
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            t, out)
+
+
+def test_async_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, _tree(s), blocking=False)
+        ck.wait()
+        assert ck.steps() == [3, 4]
+
+
+def test_corruption_detected():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(1, t)
+        # corrupt the npz payload
+        path = os.path.join(d, "step_1", "arrays.npz")
+        data = dict(np.load(path))
+        data["a"] = data["a"] + 1.0
+        np.savez(path, **data)
+        with pytest.raises(IOError, match="corruption"):
+            ck.restore(1, t)
+
+
+def test_atomicity_tmp_never_visible():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(7, _tree())
+        names = os.listdir(d)
+        assert names == ["step_7"], names

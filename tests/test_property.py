@@ -1,0 +1,116 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import spectral as sp
+from repro.kernels import ops, ref as ref_k
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+dims = st.sampled_from([16, 32, 64, 128])
+
+
+@given(n=dims, frac=st.floats(0.1, 1.0), seed=st.integers(0, 2 ** 16))
+def test_truncated_rdft_matches_fft(n, frac, seed):
+    k = max(1, min(int(frac * (n // 2 + 1)), n // 2 + 1))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, n)), jnp.float32)
+    xr, xi = sp.truncated_rdft(x, k)
+    ref = np.fft.rfft(np.asarray(x), axis=-1)[..., :k]
+    np.testing.assert_allclose(np.asarray(xr), ref.real, rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(xi), ref.imag, rtol=1e-3,
+                               atol=1e-3)
+
+
+@given(n=dims, frac=st.floats(0.1, 0.95), seed=st.integers(0, 2 ** 16))
+def test_padded_irdft_matches_irfft(n, frac, seed):
+    k = max(1, int(frac * (n // 2)))
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(2, k)) + 1j * rng.normal(size=(2, k))
+    y = sp.padded_irdft(jnp.asarray(z.real, jnp.float32),
+                        jnp.asarray(z.imag, jnp.float32), n)
+    ref = np.fft.irfft(np.pad(z, ((0, 0), (0, n // 2 + 1 - k))), n=n,
+                       axis=-1)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-3, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_spectral_layer_linearity(seed):
+    """The whole fused layer is linear in x: f(a·x1 + x2) = a·f(x1)+f(x2)."""
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    x1, x2 = mk(2, 8, 32), mk(2, 8, 32)
+    wr, wi = mk(8, 8) / 8, mk(8, 8) / 8
+    f = lambda x: ops.spectral_layer_1d(x, wr, wi, 9, path="xla")
+    lhs = f(1.7 * x1 + x2)
+    rhs = 1.7 * f(x1) + f(x2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3,
+                               atol=1e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16), n=dims)
+def test_truncation_contracts_energy(seed, n):
+    """Truncation is an orthogonal projection: output energy of the
+    identity-weight layer never exceeds input energy (Parseval)."""
+    k = n // 4 + 1
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 4, n)), jnp.float32)
+    eye = jnp.eye(4, dtype=jnp.float32)
+    y = ops.spectral_layer_1d(x, eye, jnp.zeros_like(eye), k, path="xla")
+    e_in = float(jnp.sum(x ** 2))
+    e_out = float(jnp.sum(y ** 2))
+    assert e_out <= e_in * (1 + 1e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_fusion_equals_staged(seed):
+    """pallas fused == ref staged (the paper's central correctness claim)."""
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    x = mk(2, 8, 64)
+    wr, wi = mk(8, 8) / 8, mk(8, 8) / 8
+    y1 = ops.spectral_layer_1d(x, wr, wi, 17, path="pallas")
+    y0 = ref_k.ref_fno1d(x, wr, wi, 17)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4,
+                               atol=2e-4)
+
+
+@given(n=st.sampled_from([4, 8, 16, 32, 64, 128, 256, 512]),
+       frac=st.floats(0.05, 1.0))
+def test_prune_counts_monotone(n, frac):
+    """Pruned-FFT op count is monotone in k, bounded by the full FFT, and
+    reproduces the paper's Fig. 5 figures."""
+    k = max(1, int(frac * n))
+    ops_k = sp.pruned_fft_ops(n, k)
+    assert 0 < ops_k <= sp.fft_ops(n)
+    if k > 1:
+        assert sp.pruned_fft_ops(n, k - 1) <= ops_k
+    assert sp.pruned_fft_ops(4, 1) / sp.fft_ops(4) == 0.375
+    assert sp.pruned_fft_ops(4, 2) / sp.fft_ops(4) == 0.75
+
+
+@given(seed=st.integers(0, 2 ** 16),
+       e=st.sampled_from([2, 4, 8]), k=st.sampled_from([1, 2]))
+def test_moe_gates_normalized_and_conserving(seed, e, k):
+    from repro.configs import get_config
+    import dataclasses
+    from repro.models import moe as moe_mod
+    cfg = dataclasses.replace(get_config("mixtral-8x7b", reduced=True),
+                              num_experts=e, top_k=k, capacity_factor=8.0)
+    key = jax.random.PRNGKey(seed)
+    p = moe_mod.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    y, aux = moe_mod.apply_moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    # E·Σ load·importance ≈ 1 at balance; can dip slightly below when the
+    # top-k load distribution diverges from softmax importance
+    assert 0.5 <= float(aux) < float(e)
