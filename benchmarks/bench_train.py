@@ -1,0 +1,92 @@
+"""Training-step benchmark: staged-XLA vs fused Pallas forward+backward.
+
+The TurboFNO claim extended to training — with the custom_vjp in place the
+backward pass is itself a fused DFT→CGEMM→iDFT pipeline (input cotangent)
+plus a fused rank-reduction kernel (weight cotangent), so a whole
+value_and_grad step runs without the staged path's intermediate HBM
+round-trips.
+
+Two tiers:
+  * layer: value_and_grad through a single spectral layer, 1D and 2D;
+  * step:  a full FNO AdamW train step (reduced fno2d config).
+
+derived = fused-path speedup over the staged-XLA step. NOTE: off-TPU the
+pallas kernels run in interpret mode, so absolute numbers (and speedups
+< 1) on CPU only validate the harness; TPU runs report the real ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+
+
+def _layer_cases(quick: bool):
+    cases_1d = [(4, 32, 32, 256, 64)]  # B,H,O,N,K — paper N=256, 50% trunc
+    cases_2d = [(2, 16, 16, 64, 64, 16, 16)]
+    if not quick:
+        cases_1d.append((8, 64, 64, 256, 64))
+        cases_2d.append((2, 32, 32, 64, 64, 16, 16))
+    return cases_1d, cases_2d
+
+
+def run(quick: bool = False):
+    from repro.kernels import ops
+
+    print("# bench_train (fwd+bwd): name,us_per_call,derived")
+    rng = np.random.default_rng(0)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    cases_1d, cases_2d = _layer_cases(quick)
+
+    def vag(layer_fn):
+        loss = lambda x, wr, wi: jnp.sum(layer_fn(x, wr, wi) ** 2)
+        return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+
+    for b, h, o, n, k in cases_1d:
+        x, wr, wi = mk(b, h, n), mk(o, h) / h, mk(o, h) / h
+        times = {}
+        for path in ("xla", "pallas"):
+            f = vag(lambda x, wr, wi, p=path: ops.spectral_layer_1d(
+                x, wr, wi, k, path=p))
+            times[path] = time_fn(f, x, wr, wi, iters=5)
+            row(f"grad1d_{path}_B{b}H{h}N{n}K{k}", times[path], "")
+        row(f"grad1d_speedup_B{b}H{h}N{n}K{k}", times["pallas"],
+            f"speedup={times['xla'] / times['pallas']:.2f}x")
+
+    for b, h, o, nx, ny, kx, ky in cases_2d:
+        x, wr, wi = mk(b, h, nx, ny), mk(o, h) / h, mk(o, h) / h
+        times = {}
+        for path in ("xla", "pallas"):
+            f = vag(lambda x, wr, wi, p=path: ops.spectral_layer_2d(
+                x, wr, wi, (kx, ky), path=p))
+            times[path] = time_fn(f, x, wr, wi, iters=5)
+            row(f"grad2d_{path}_B{b}H{h}XY{nx}K{kx}", times[path], "")
+        row(f"grad2d_speedup_B{b}H{h}XY{nx}K{kx}", times["pallas"],
+            f"speedup={times['xla'] / times['pallas']:.2f}x")
+
+    # full train step on the reduced 2D config
+    from repro.configs import get_config
+    from repro.core import fno as fno_mod
+    from repro.optim import AdamW
+    from repro.optim.schedule import constant
+    from repro.train.train_step import make_train_step
+
+    cfg = get_config("fno2d", reduced=True)
+    params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=constant(1e-3))
+    batch = {"x": mk(4, cfg.in_channels, *cfg.spatial),
+             "y": mk(4, cfg.out_channels, *cfg.spatial)}
+    times = {}
+    for path in ("xla", "pallas"):
+        step = jax.jit(make_train_step(cfg, opt, fno_path=path))
+        state = opt.init(params)
+        times[path] = time_fn(step, params, state, batch, iters=3)
+        row(f"train_step_{path}_{cfg.name}", times[path], "")
+    row(f"train_step_speedup_{cfg.name}", times["pallas"],
+        f"speedup={times['xla'] / times['pallas']:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

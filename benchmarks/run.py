@@ -18,17 +18,18 @@ def main() -> None:
                     help="small sweeps (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: prune,kernels,fft_opt,"
-                         "fusion,e2e")
+                         "fusion,e2e,train")
     args = ap.parse_args()
 
     from benchmarks import (bench_e2e, bench_fft_opt, bench_fusion,
-                            bench_kernels, bench_prune)
+                            bench_kernels, bench_prune, bench_train)
     table = {
         "prune": lambda: bench_prune.run(),
         "kernels": lambda: bench_kernels.run(args.quick),
         "fft_opt": lambda: bench_fft_opt.run(args.quick),
         "fusion": lambda: bench_fusion.run(args.quick),
         "e2e": lambda: bench_e2e.run(args.quick),
+        "train": lambda: bench_train.run(args.quick),
     }
     only = args.only.split(",") if args.only else list(table)
     for name in only:

@@ -32,7 +32,12 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--full", action="store_true",
                     help="fno2d-large (~134M params, per-mode weights)")
-    ap.add_argument("--path", default="xla", choices=["ref", "xla", "pallas"])
+    ap.add_argument("--path", default="xla", choices=["ref", "xla", "pallas"],
+                    help="pallas = fused kernels fwd AND bwd (custom_vjp); "
+                         "no staged-XLA fallback")
+    ap.add_argument("--variant", default="full", choices=["full", "partial"],
+                    help="2D pallas fusion: full (beyond-paper) or partial "
+                         "(paper-faithful; shared weights only)")
     args = ap.parse_args()
 
     cfg = get_config("fno2d-large" if args.full else "fno2d",
@@ -42,11 +47,13 @@ def main():
     n = cfg.spatial[0]
     print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"grid {cfg.spatial}, modes {cfg.modes}, "
-          f"weights={cfg.weight_mode}, path={args.path}")
+          f"weights={cfg.weight_mode}, path={args.path}, "
+          f"variant={args.variant}")
 
     opt = AdamW(lr=cosine_warmup(args.lr, args.steps // 10 + 1, args.steps),
                 weight_decay=0.0)
-    step = jax.jit(make_train_step(cfg, opt, fno_path=args.path))
+    step = jax.jit(make_train_step(cfg, opt, fno_path=args.path,
+                                   fno_variant=args.variant))
     batch_fn = lambda i: pde.darcy_batch(0, i, args.batch, n,
                                          iters=150 if args.full else 100)
 

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 gate (ROADMAP.md §Tier-1 verify): the full suite must pass with
+# zero collection errors. Run from anywhere; extra args forwarded to pytest
+# (e.g. scripts/check.sh -x -k kernels).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q "$@"

@@ -78,6 +78,6 @@ def relative_l2(pred: jax.Array, target: jax.Array) -> jax.Array:
 
 
 def fno_loss(params, cfg: FNOConfig, batch: Dict[str, jax.Array],
-             *, path: str = None) -> jax.Array:
-    pred = apply_fno(params, cfg, batch["x"], path=path)
+             *, path: str = None, variant: str = "full") -> jax.Array:
+    pred = apply_fno(params, cfg, batch["x"], path=path, variant=variant)
     return relative_l2(pred, batch["y"])

@@ -82,6 +82,51 @@ def cdft_mats(n: int, modes: int, inverse: bool = False,
 
 
 # ---------------------------------------------------------------------------
+# Adjoint (transposed) factories — the backward fused pipeline.
+#
+# The spectral layer is y = Re(((x·C)∘W)·E): a real-linear map whose matrix
+# entries are Re(C[n,m]·W[o,h,m]·E[m,j]). Its adjoint w.r.t. x is therefore
+# the SAME fused DFT→CGEMM→iDFT pipeline with every DFT operand transposed
+# (no conjugation needed — conjugating all factors at once leaves the real
+# part unchanged) and the weight transposed over (out, hidden). These
+# factories supply the transposed operands in the orientation the fused
+# kernels expect.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def rdft_adjoint_mats(n: int, modes: int, dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Transposed truncated-rDFT operands, each [modes, n].
+
+    Used as the backward pipeline's *inverse*-slot operand: the input
+    cotangent ends with dx = Tr @ Crᵀ − Ti @ Ciᵀ.
+    """
+    cr, ci = rdft_mats(n, modes, dtype)
+    return np.ascontiguousarray(cr.T), np.ascontiguousarray(ci.T)
+
+
+@functools.lru_cache(maxsize=64)
+def irdft_adjoint_mats(n: int, modes: int, dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Transposed padded-irDFT operands, each [n, modes].
+
+    Used as the backward pipeline's *forward*-slot operand: the output
+    cotangent g enters the spectral domain as G = g @ Erᵀ + i·(g @ Eiᵀ).
+    """
+    er, ei = irdft_mats(n, modes, dtype)
+    return np.ascontiguousarray(er.T), np.ascontiguousarray(ei.T)
+
+
+@functools.lru_cache(maxsize=64)
+def cdft_adjoint_mats(n: int, modes: int, inverse: bool = False,
+                      dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Transposed complex-DFT operands.
+
+    forward transposed: [modes, n] (backward inverse slot);
+    inverse transposed: [n, modes] (backward forward slot).
+    """
+    fr, fi = cdft_mats(n, modes, inverse, dtype)
+    return np.ascontiguousarray(fr.T), np.ascontiguousarray(fi.T)
+
+
+# ---------------------------------------------------------------------------
 # XLA-path transforms (matmul formulation; fused by XLA, no Pallas)
 # ---------------------------------------------------------------------------
 def truncated_rdft(x: jax.Array, modes: int) -> Tuple[jax.Array, jax.Array]:

@@ -1,3 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the fused FFT→CGEMM→iFFT pipeline.
+
+Version-compat policy (ROADMAP.md §Compat): the kernels support JAX 0.4.x
+and ≥0.5. API renames are absorbed here, in one place, so the kernel
+modules themselves stay version-agnostic.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax ≥0.5 renamed TPUCompilerParams -> CompilerParams. Resolve once at
+# import time; both accept the same kwargs we use (dimension_semantics).
+_COMPILER_PARAMS_CLS = getattr(pltpu, "TPUCompilerParams", None) or getattr(
+    pltpu, "CompilerParams")
+
+
+def _compiler_params(**kwargs):
+    """Build pltpu compiler params on any supported JAX version."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compiler_params
+
 _F32 = jnp.float32
 
 
@@ -64,7 +66,7 @@ def cgemm_call(ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((m, n), ar.dtype)] * 2,
         scratch_shapes=[pltpu.VMEM((bm, bn), _F32),
                         pltpu.VMEM((bm, bn), _F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(ar, ai, br, bi)

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compiler_params
+
 _F32 = jnp.float32
 
 
@@ -94,6 +96,101 @@ def _fused_kernel_permode(x_ref, wr_ref, wi_ref, cr_ref, ci_ref, er_ref,
         y_ref[...] = (yr - yi).astype(y_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Fused weight-gradient kernel (backward pass of the spectral layer).
+#
+# With A = DFT(x) ([B,H,K] complex) and G = g @ Eᵀ (the output cotangent
+# pushed into the spectral domain, [B,O,K] complex), the weight cotangent is
+#
+#     dW[o,h(,m)] = conj( Σ_b G[b,o,m]·A[b,h,m] )     (Σ_m too when shared)
+#
+# — a fused rank-reduction: both DFTs are computed straight into VMEM and
+# consumed by the reduction without an HBM round trip, mirroring the forward
+# kernel's Fig. 7 forwarding. Grid = (out tiles, hidden tiles, batch tiles)
+# with BATCH innermost as the accumulation loop.
+# ---------------------------------------------------------------------------
+def _wgrad_kernel(x_ref, g_ref, cr_ref, ci_ref, etr_ref, eti_ref,
+                  dwr_ref, dwi_ref, accr, acci):
+    """Blocks: x[bb,bh,N] g[bb,bo,N] c[N,K] et[N,K];
+    dw[bo,bh] shared / dw[K,bo,bh] per-mode (caller transposes; acc matches
+    dw)."""
+    per_mode = dwr_ref.ndim == 3
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr[...] = jnp.zeros_like(accr)
+        acci[...] = jnp.zeros_like(acci)
+
+    x, g = x_ref[...], g_ref[...]
+    ar = _dot(x, cr_ref[...], (((2,), (0,))))   # A = DFT(x): [bb,bh,K]
+    ai = _dot(x, ci_ref[...], (((2,), (0,))))
+    gr = _dot(g, etr_ref[...], (((2,), (0,))))  # G = g@Eᵀ: [bb,bo,K]
+    gi = _dot(g, eti_ref[...], (((2,), (0,))))
+
+    if per_mode:
+        def rdot(p, q):  # batched over K: [bb,bo,K]x[bb,bh,K] -> [K,bo,bh]
+            return jax.lax.dot_general(p, q, (((0,), (0,)), ((2,), (2,))),
+                                       preferred_element_type=_F32)
+    else:
+        def rdot(p, q):  # contract (b, K): [bb,bo,K]x[bb,bh,K] -> [bo,bh]
+            return jax.lax.dot_general(p, q, (((0, 2), (0, 2)), ((), ())),
+                                       preferred_element_type=_F32)
+
+    accr[...] += rdot(gr, ar) - rdot(gi, ai)
+    acci[...] += rdot(gr, ai) + rdot(gi, ar)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        # dW = conj(acc): real part as-is, imaginary part negated.
+        dwr_ref[...] = accr[...].astype(dwr_ref.dtype)
+        dwi_ref[...] = (-acci[...]).astype(dwi_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bb", "bo", "bh", "per_mode", "interpret"))
+def fused_fno1d_wgrad_call(x: jax.Array, g: jax.Array, cr: jax.Array,
+                           ci: jax.Array, etr: jax.Array, eti: jax.Array,
+                           bb: int, bo: int, bh: int, per_mode: bool,
+                           interpret: bool = False
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,H,N] primal; g: [B,O,N] cotangent; c,et: [N,K].
+
+    Returns (dwr, dwi): [O,H] shared, or [K,O,H] per-mode (caller transposes
+    back to [O,H,K]). All of B,O,H must divide by (bb,bo,bh); K,N whole
+    blocks (ops.py pads).
+    """
+    b, h, n = x.shape
+    o = g.shape[1]
+    k = cr.shape[1]
+    grid = (o // bo, h // bh, b // bb)
+
+    x_spec = pl.BlockSpec((bb, bh, n), lambda i, j, kb: (kb, j, 0))
+    g_spec = pl.BlockSpec((bb, bo, n), lambda i, j, kb: (kb, i, 0))
+    m_spec = pl.BlockSpec((n, k), lambda i, j, kb: (0, 0))
+    if per_mode:
+        dw_spec = pl.BlockSpec((k, bo, bh), lambda i, j, kb: (0, i, j))
+        dw_shape = (k, o, h)
+        acc_shape = (k, bo, bh)
+    else:
+        dw_spec = pl.BlockSpec((bo, bh), lambda i, j, kb: (i, j))
+        dw_shape = (o, h)
+        acc_shape = (bo, bh)
+    out_sd = jax.ShapeDtypeStruct(dw_shape, x.dtype)
+
+    return pl.pallas_call(
+        _wgrad_kernel,
+        grid=grid,
+        in_specs=[x_spec, g_spec, m_spec, m_spec, m_spec, m_spec],
+        out_specs=[dw_spec, dw_spec],
+        out_shape=[out_sd, out_sd],
+        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
+                        pltpu.VMEM(acc_shape, _F32)],
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, g, cr, ci, etr, eti)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
 def fused_fno1d_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
@@ -132,7 +229,7 @@ def fused_fno1d_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, o, n), x.dtype),
         scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
                         pltpu.VMEM(acc_shape, _F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, wr, wi, cr, ci, er, ei)

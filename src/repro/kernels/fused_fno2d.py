@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compiler_params
+
 _F32 = jnp.float32
 
 
@@ -95,10 +97,117 @@ def fused_fno2d_call(zr: jax.Array, zi: jax.Array, wr: jax.Array,
         out_shape=[out_sd, out_sd],
         scratch_shapes=[pltpu.VMEM((bb, ky, kx, bo), _F32),
                         pltpu.VMEM((bb, ky, kx, bo), _F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(zr, zi, wr, wi, fr, fi, gr, gi)
+
+
+# ---------------------------------------------------------------------------
+# Fused 2D weight-gradient kernel (backward pass).
+#
+# With A = the truncated 2D spectrum of x (forward stages 1-2, [B,H,KY,KX])
+# and Ĝ = the output cotangent pushed into the spectral domain through the
+# transposed inverse transforms (g @ Eᵀ along Y, then @ G_invᵀ along X,
+# [B,O,KY,KX]), the weight cotangent is
+#
+#   dW[o,h(,kx,ky)] = conj( Σ_b Ĝ[b,o,ky,kx]·A[b,h,ky,kx] )   (Σ_{ky,kx}
+#                                                              when shared)
+#
+# Both spectra are computed in VMEM and consumed by the rank-reduction with
+# no HBM round trip. Grid = (out, hidden, batch) with batch innermost.
+# ---------------------------------------------------------------------------
+def _wgrad2d_kernel(x_ref, g_ref, cr_ref, ci_ref, fr_ref, fi_ref, etr_ref,
+                    eti_ref, gtr_ref, gti_ref, dwr_ref, dwi_ref, accr, acci):
+    """Blocks: x[bb,bh,X,Y] g[bb,bo,X,Y] c,et[Y,KY] f,gt[X,KX];
+    dw[bo,bh] shared / dw[KY,KX,bo,bh] per-mode (acc matches dw)."""
+    per_mode = dwr_ref.ndim == 4
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr[...] = jnp.zeros_like(accr)
+        acci[...] = jnp.zeros_like(acci)
+
+    xv, gv = x_ref[...], g_ref[...]
+    # A: rDFT along Y then cDFT along X -> [bb,bh,KY,KX].
+    zr = _dot(xv, cr_ref[...], ((3,), (0,)))
+    zi = _dot(xv, ci_ref[...], ((3,), (0,)))
+    fr, fi = fr_ref[...], fi_ref[...]
+    ar = _dot(zr, fr, ((2,), (0,))) - _dot(zi, fi, ((2,), (0,)))
+    ai = _dot(zr, fi, ((2,), (0,))) + _dot(zi, fr, ((2,), (0,)))
+    # Ĝ: transposed-irDFT along Y then transposed-icDFT along X
+    # -> [bb,bo,KY,KX].
+    tr = _dot(gv, etr_ref[...], ((3,), (0,)))
+    ti = _dot(gv, eti_ref[...], ((3,), (0,)))
+    gtr, gti = gtr_ref[...], gti_ref[...]
+    hr = _dot(tr, gtr, ((2,), (0,))) - _dot(ti, gti, ((2,), (0,)))
+    hi = _dot(tr, gti, ((2,), (0,))) + _dot(ti, gtr, ((2,), (0,)))
+
+    if per_mode:
+        def rdot(p, q):  # contract b, batch (KY,KX) -> [KY,KX,bo,bh]
+            return jax.lax.dot_general(
+                p, q, (((0,), (0,)), ((2, 3), (2, 3))),
+                preferred_element_type=_F32)
+    else:
+        def rdot(p, q):  # contract (b,KY,KX) -> [bo,bh]
+            return jax.lax.dot_general(
+                p, q, (((0, 2, 3), (0, 2, 3)), ((), ())),
+                preferred_element_type=_F32)
+
+    accr[...] += rdot(hr, ar) - rdot(hi, ai)
+    acci[...] += rdot(hr, ai) + rdot(hi, ar)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        dwr_ref[...] = accr[...].astype(dwr_ref.dtype)
+        dwi_ref[...] = (-acci[...]).astype(dwi_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bb", "bo", "bh", "per_mode", "interpret"))
+def fused_fno2d_wgrad_call(x: jax.Array, g: jax.Array, cr: jax.Array,
+                           ci: jax.Array, fr: jax.Array, fi: jax.Array,
+                           etr: jax.Array, eti: jax.Array, gtr: jax.Array,
+                           gti: jax.Array, bb: int, bo: int, bh: int,
+                           per_mode: bool, interpret: bool = False
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,H,X,Y] primal; g: [B,O,X,Y] cotangent; c,et: [Y,KY];
+    f,gt: [X,KX]. Returns (dwr, dwi): [O,H] shared or [KY,KX,O,H] per-mode
+    (caller transposes back to [O,H,KX,KY])."""
+    b, h, nx, ny = x.shape
+    o = g.shape[1]
+    ky = cr.shape[1]
+    kx = fr.shape[1]
+    grid = (o // bo, h // bh, b // bb)
+
+    x_spec = pl.BlockSpec((bb, bh, nx, ny), lambda i, j, kb: (kb, j, 0, 0))
+    g_spec = pl.BlockSpec((bb, bo, nx, ny), lambda i, j, kb: (kb, i, 0, 0))
+    mat = lambda r, c_: pl.BlockSpec((r, c_), lambda i, j, kb: (0, 0))
+    if per_mode:
+        dw_spec = pl.BlockSpec((ky, kx, bo, bh),
+                               lambda i, j, kb: (0, 0, i, j))
+        dw_shape = (ky, kx, o, h)
+        acc_shape = (ky, kx, bo, bh)
+    else:
+        dw_spec = pl.BlockSpec((bo, bh), lambda i, j, kb: (i, j))
+        dw_shape = (o, h)
+        acc_shape = (bo, bh)
+    out_sd = jax.ShapeDtypeStruct(dw_shape, x.dtype)
+
+    return pl.pallas_call(
+        _wgrad2d_kernel,
+        grid=grid,
+        in_specs=[x_spec, g_spec, mat(ny, ky), mat(ny, ky), mat(nx, kx),
+                  mat(nx, kx), mat(ny, ky), mat(ny, ky), mat(nx, kx),
+                  mat(nx, kx)],
+        out_specs=[dw_spec, dw_spec],
+        out_shape=[out_sd, out_sd],
+        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
+                        pltpu.VMEM(acc_shape, _F32)],
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, g, cr, ci, fr, fi, etr, eti, gtr, gti)
 
 
 # ---------------------------------------------------------------------------
@@ -195,7 +304,7 @@ def fused_fno2d_full_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, o, nx, ny), x.dtype),
         scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
                         pltpu.VMEM(acc_shape, _F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, wr, wi, cr, ci, fr, fi, gr, gi, er, ei)

@@ -54,6 +54,15 @@ def _pick_block(dim: int, pref: int) -> int:
     return min(pref, _rup(dim, 8)) if dim < pref else pref
 
 
+def _blocks(x, o, bb, bo, bh):
+    """Resolve (bb,bo,bh) block sizes and padded (B,O,H) for x[B,H,...]."""
+    b, h = x.shape[:2]
+    bb = _pick_block(b, bb)
+    bo = _pick_block(o, bo)
+    bh = _pick_block(h, bh)
+    return bb, bo, bh, _rup(b, bb), _rup(o, bo), _rup(h, bh)
+
+
 # ---------------------------------------------------------------------------
 # Standalone truncated-DFT kernels (paper §3.3 — FFT w/ built-in filtering)
 # ---------------------------------------------------------------------------
@@ -125,20 +134,102 @@ def cgemm(ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array, *,
 
 # ---------------------------------------------------------------------------
 # Fused FNO spectral layers (the paper's contribution)
+#
+# The pallas path is wrapped in jax.custom_vjp so training can stay on the
+# fused kernels end-to-end. The layer is y = Re(((x·C)∘W)·E) — real-linear
+# in both x and W — so:
+#   * dx is the SAME fused DFT→CGEMM→iDFT pipeline run on the cotangent
+#     with transposed DFT operands (spectral.*_adjoint_mats) and the weight
+#     swapped over (out, hidden);
+#   * dW is the fused rank-reduction kernel (fused_fno*_wgrad_call):
+#     conj(Σ_b Ĝ·A) with both spectra computed in-kernel.
 # ---------------------------------------------------------------------------
-def _mats_1d(n: int, modes: int, kp: int, dtype):
-    cr, ci = spectral.rdft_mats(n, modes)
-    er, ei = spectral.irdft_mats(n, modes)
+def _mats_1d(n: int, modes: int, kp: int, dtype, adjoint: bool = False):
+    if adjoint:
+        cr, ci = spectral.irdft_adjoint_mats(n, modes)  # [n, modes]
+        er, ei = spectral.rdft_adjoint_mats(n, modes)   # [modes, n]
+    else:
+        cr, ci = spectral.rdft_mats(n, modes)
+        er, ei = spectral.irdft_mats(n, modes)
     pad_c = lambda a: _pad_axis(jnp.asarray(a, dtype), 1, kp)
     pad_e = lambda a: _pad_axis(jnp.asarray(a, dtype), 0, kp)
     return pad_c(cr), pad_c(ci), pad_e(er), pad_e(ei)
+
+
+def _fno1d_fused(x, wr, wi, modes, bb, bo, bh, interpret,
+                 adjoint: bool = False):
+    """Pad to block multiples and invoke the fused 1D kernel.
+
+    adjoint=True runs the input-cotangent pipeline: transposed DFT
+    operands; the caller passes (out, hidden)-swapped weights.
+    """
+    b, h, n = x.shape
+    o = wr.shape[0]
+    per_mode = wr.ndim == 3
+    kp = _rup(modes, 128)
+    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
+    cr, ci, er, ei = _mats_1d(n, modes, kp, x.dtype, adjoint)
+    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+    wpad = lambda w: _pad_axis(_pad_axis(
+        (_pad_axis(w, 2, kp) if per_mode else w), 0, op_), 1, hp)
+    y = f1d.fused_fno1d_call(xpad, wpad(wr), wpad(wi), cr, ci, er, ei,
+                             bb=bb, bo=bo, bh=bh, interpret=interpret)
+    return y[:b, :o]
+
+
+def _fno1d_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode):
+    """Fused weight cotangent: [B,H,K]ᴴ·[B,O,K] rank reduction."""
+    b, h, n = x.shape
+    o = gy.shape[1]
+    kp = _rup(modes, 128)
+    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
+    dtype = x.dtype
+    cr, ci = spectral.rdft_mats(n, modes)
+    etr, eti = spectral.irdft_adjoint_mats(n, modes)
+    pad_c = lambda a: _pad_axis(jnp.asarray(a, dtype), 1, kp)
+    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+    gpad = _pad_axis(_pad_axis(gy, 0, bp), 1, op_)
+    dwr, dwi = f1d.fused_fno1d_wgrad_call(
+        xpad, gpad, pad_c(cr), pad_c(ci), pad_c(etr), pad_c(eti),
+        bb=bb, bo=bo, bh=bh, per_mode=per_mode, interpret=interpret)
+    if per_mode:  # kernel emits [K,O,H]
+        return (jnp.transpose(dwr, (1, 2, 0))[:o, :h, :modes],
+                jnp.transpose(dwi, (1, 2, 0))[:o, :h, :modes])
+    return dwr[:o, :h], dwi[:o, :h]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _spectral_layer_1d_pallas(x, wr, wi, modes, bb, bo, bh, interpret):
+    return _fno1d_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+
+
+def _fno1d_vjp_fwd(x, wr, wi, modes, bb, bo, bh, interpret):
+    y = _fno1d_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+    return y, (x, wr, wi)
+
+
+def _fno1d_vjp_bwd(modes, bb, bo, bh, interpret, res, gy):
+    x, wr, wi = res
+    gy = gy.astype(x.dtype)
+    dx = _fno1d_fused(gy, jnp.swapaxes(wr, 0, 1), jnp.swapaxes(wi, 0, 1),
+                      modes, bb, bo, bh, interpret, adjoint=True)
+    dwr, dwi = _fno1d_wgrad(x, gy, modes, bb, bo, bh, interpret,
+                            per_mode=wr.ndim == 3)
+    return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype))
+
+
+_spectral_layer_1d_pallas.defvjp(_fno1d_vjp_fwd, _fno1d_vjp_bwd)
 
 
 def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: int, *, path: str = "pallas",
                       bb: int = 8, bo: int = 128, bh: int = 128,
                       interpret: Optional[bool] = None) -> jax.Array:
-    """Full 1D FNO spectral layer. x: [B,H,N]; w: [O,H] or [O,H,modes]."""
+    """Full 1D FNO spectral layer. x: [B,H,N]; w: [O,H] or [O,H,modes].
+
+    path="pallas" is differentiable: jax.grad routes through the fused
+    backward kernels (custom_vjp), never falling back to XLA.
+    """
     if path == "ref":
         return ref_k.ref_fno1d(x, wr, wi, modes)
     n = x.shape[-1]
@@ -148,32 +239,114 @@ def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
         yr = jnp.einsum(eq, wr, xr) - jnp.einsum(eq, wi, xi)
         yi = jnp.einsum(eq, wr, xi) + jnp.einsum(eq, wi, xr)
         return spectral.padded_irdft(yr, yi, n)
+    return _spectral_layer_1d_pallas(x, wr, wi, modes, bb, bo, bh,
+                                     _interpret(interpret))
 
-    b, h, _ = x.shape
+
+def _mats_2d(nx: int, ny: int, kx: int, ky: int, dtype,
+             adjoint: bool = False):
+    if adjoint:
+        cr, ci = spectral.irdft_adjoint_mats(ny, ky)        # Eᵀ [ny,ky]
+        fr, fi = spectral.cdft_adjoint_mats(nx, kx, True)   # G⁻ᵀ [nx,kx]
+        gr, gi = spectral.cdft_adjoint_mats(nx, kx, False)  # Fᵀ [kx,nx]
+        er, ei = spectral.rdft_adjoint_mats(ny, ky)         # Cᵀ [ky,ny]
+    else:
+        cr, ci = spectral.rdft_mats(ny, ky)  # stage-1: rDFT along Y
+        fr, fi = spectral.cdft_mats(nx, kx, False)  # stage-2: cDFT along X
+        gr, gi = spectral.cdft_mats(nx, kx, True)  # inverse cDFT along X
+        er, ei = spectral.irdft_mats(ny, ky)  # inverse rDFT along Y
+    j = lambda a: jnp.asarray(a, dtype)
+    return (j(cr), j(ci), j(fr), j(fi), j(gr), j(gi), j(er), j(ei))
+
+
+def _fno2d_full_fused(x, wr, wi, modes, bb, bo, bh, interpret,
+                      adjoint: bool = False):
+    """Pad and invoke the fully fused 2D kernel (forward or, with
+    adjoint=True and swapped weights, the input-cotangent pipeline)."""
+    kx, ky = modes
+    nx, ny = x.shape[-2:]
+    b, h = x.shape[:2]
     o = wr.shape[0]
-    per_mode = wr.ndim == 3
-    kp = _rup(modes, 128)
-    bb = _pick_block(b, bb)
-    bo = _pick_block(o, bo)
-    bh = _pick_block(h, bh)
-    bp, op_, hp = _rup(b, bb), _rup(o, bo), _rup(h, bh)
-    cr, ci, er, ei = _mats_1d(n, modes, kp, x.dtype)
+    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
     xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
-    wpad = lambda w: _pad_axis(_pad_axis(
-        (_pad_axis(w, 2, kp) if per_mode else w), 0, op_), 1, hp)
-    y = f1d.fused_fno1d_call(xpad, wpad(wr), wpad(wi), cr, ci, er, ei,
-                             bb=bb, bo=bo, bh=bh,
-                             interpret=_interpret(interpret))
+    mats = _mats_2d(nx, ny, kx, ky, x.dtype, adjoint)
+    wpad = lambda w: _pad_axis(_pad_axis(w, 0, op_), 1, hp)
+    y = f2d.fused_fno2d_full_call(xpad, wpad(wr), wpad(wi), *mats,
+                                  bb=bb, bo=bo, bh=bh, interpret=interpret)
     return y[:b, :o]
 
 
-def _mats_2d(nx: int, ny: int, kx: int, ky: int, dtype):
-    cr, ci = spectral.rdft_mats(ny, ky)  # stage-1: rDFT along Y
-    fr, fi = spectral.cdft_mats(nx, kx, False)  # stage-2: cDFT along X
-    gr, gi = spectral.cdft_mats(nx, kx, True)  # inverse cDFT along X
-    er, ei = spectral.irdft_mats(ny, ky)  # inverse rDFT along Y
+def _fno2d_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode):
+    """Fused 2D weight cotangent: conj(Σ_b Ĝ·A) rank reduction."""
+    kx, ky = modes
+    b, h, nx, ny = x.shape
+    o = gy.shape[1]
+    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
+    dtype = x.dtype
     j = lambda a: jnp.asarray(a, dtype)
-    return (j(cr), j(ci), j(fr), j(fi), j(gr), j(gi), j(er), j(ei))
+    cr, ci = spectral.rdft_mats(ny, ky)
+    fr, fi = spectral.cdft_mats(nx, kx, False)
+    etr, eti = spectral.irdft_adjoint_mats(ny, ky)
+    gtr, gti = spectral.cdft_adjoint_mats(nx, kx, True)
+    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+    gpad = _pad_axis(_pad_axis(gy, 0, bp), 1, op_)
+    dwr, dwi = f2d.fused_fno2d_wgrad_call(
+        xpad, gpad, j(cr), j(ci), j(fr), j(fi), j(etr), j(eti), j(gtr),
+        j(gti), bb=bb, bo=bo, bh=bh, per_mode=per_mode, interpret=interpret)
+    if per_mode:  # kernel emits [KY,KX,O,H] -> [O,H,KX,KY]
+        return (jnp.transpose(dwr, (2, 3, 1, 0))[:o, :h],
+                jnp.transpose(dwi, (2, 3, 1, 0))[:o, :h])
+    return dwr[:o, :h], dwi[:o, :h]
+
+
+def _fno2d_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret):
+    if variant == "full":
+        return _fno2d_full_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+    # paper-faithful partial fusion: stage-1 truncated rDFT as separate
+    # kernel, then [cDFT_X → CGEMM → icDFT_X] fused, then separate irDFT.
+    kx, ky = modes
+    nx, ny = x.shape[-2:]
+    b, h = x.shape[:2]
+    o = wr.shape[0]
+    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
+    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+    _, _, fr, fi, gr, gi, _, _ = _mats_2d(nx, ny, kx, ky, x.dtype)
+    wpad = lambda w: _pad_axis(_pad_axis(w, 0, op_), 1, hp)
+    zr, zi = truncated_rdft(xpad, ky, path="pallas", interpret=interpret)
+    yr, yi = f2d.fused_fno2d_call(zr, zi, wpad(wr), wpad(wi), fr, fi, gr, gi,
+                                  bb=bb, bo=bo, bh=bh, interpret=interpret)
+    # y pair [B,KY,O,X] -> [B,O,X,KY], then final padded irDFT along Y.
+    yr = jnp.transpose(yr[:b, :, :o], (0, 2, 3, 1))
+    yi = jnp.transpose(yi[:b, :, :o], (0, 2, 3, 1))
+    return padded_irdft(yr, yi, ny, path="pallas", interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _spectral_layer_2d_pallas(x, wr, wi, modes, variant, bb, bo, bh,
+                              interpret):
+    return _fno2d_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh,
+                              interpret)
+
+
+def _fno2d_vjp_fwd(x, wr, wi, modes, variant, bb, bo, bh, interpret):
+    y = _fno2d_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret)
+    return y, (x, wr, wi)
+
+
+def _fno2d_vjp_bwd(modes, variant, bb, bo, bh, interpret, res, gy):
+    # partial and full compute the same linear map, so one adjoint (the
+    # fully fused one) serves both variants.
+    x, wr, wi = res
+    gy = gy.astype(x.dtype)
+    dx = _fno2d_full_fused(gy, jnp.swapaxes(wr, 0, 1),
+                           jnp.swapaxes(wi, 0, 1), modes, bb, bo, bh,
+                           interpret, adjoint=True)
+    dwr, dwi = _fno2d_wgrad(x, gy, modes, bb, bo, bh, interpret,
+                            per_mode=wr.ndim == 4)
+    return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype))
+
+
+_spectral_layer_2d_pallas.defvjp(_fno2d_vjp_fwd, _fno2d_vjp_bwd)
 
 
 def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
@@ -185,7 +358,8 @@ def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
 
     x: [B,H,X,Y]; w: [O,H] or [O,H,kx,ky]. variant: "partial" fuses only
     around the CGEMM (paper-faithful); "full" fuses the entire layer
-    (beyond-paper, DESIGN.md §3.4).
+    (beyond-paper, DESIGN.md §3.4). path="pallas" is differentiable via
+    custom_vjp (fused backward for both variants).
     """
     kx, ky = modes
     if path == "ref":
@@ -204,34 +378,9 @@ def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
         yr2 = spectral.padded_irdft(tr, ti, ny)  # real [B,O,X,Y]
         return yr2
 
-    b, h = x.shape[:2]
-    o = wr.shape[0]
-    bb = _pick_block(b, bb)
-    bo = _pick_block(o, bo)
-    bh = _pick_block(h, bh)
-    bp, op_, hp = _rup(b, bb), _rup(o, bo), _rup(h, bh)
-    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
-    cr, ci, fr, fi, gr, gi, er, ei = _mats_2d(nx, ny, kx, ky, x.dtype)
-
-    def wpad(w):
-        return _pad_axis(_pad_axis(w, 0, op_), 1, hp)
-
-    itp = _interpret(interpret)
-    if variant == "full":
-        y = f2d.fused_fno2d_full_call(
-            xpad, wpad(wr), wpad(wi), cr, ci, fr, fi, gr, gi, er, ei,
-            bb=bb, bo=bo, bh=bh, interpret=itp)
-        return y[:b, :o]
-
-    if per_mode:
+    if variant != "full" and per_mode:
         raise NotImplementedError(
             "paper-faithful partial fusion implements the paper's shared-"
             "weight CGEMM; use variant='full' or path='xla' for per_mode")
-    # paper-faithful: stage-1 truncated rDFT as separate kernel
-    zr, zi = truncated_rdft(xpad, ky, path="pallas", interpret=itp)
-    yr, yi = f2d.fused_fno2d_call(zr, zi, wpad(wr), wpad(wi), fr, fi, gr, gi,
-                                  bb=bb, bo=bo, bh=bh, interpret=itp)
-    # y pair [B,KY,O,X] -> [B,O,X,KY], then final padded irDFT along Y.
-    yr = jnp.transpose(yr[:b, :, :o], (0, 2, 3, 1))
-    yi = jnp.transpose(yi[:b, :, :o], (0, 2, 3, 1))
-    return padded_irdft(yr, yi, ny, path="pallas", interpret=itp)
+    return _spectral_layer_2d_pallas(x, wr, wi, modes, variant, bb, bo, bh,
+                                     _interpret(interpret))

@@ -19,11 +19,12 @@ from repro.models import transformer as tf
 from repro.optim.adamw import AdamW, global_norm
 
 
-def make_loss_fn(cfg, *, remat: bool = False, fno_path: str = "xla"
-                 ) -> Callable:
+def make_loss_fn(cfg, *, remat: bool = False, fno_path: str = "xla",
+                 fno_variant: str = "full") -> Callable:
     if isinstance(cfg, FNOConfig):
         def loss_fn(params, batch):
-            return fno_mod.fno_loss(params, cfg, batch, path=fno_path)
+            return fno_mod.fno_loss(params, cfg, batch, path=fno_path,
+                                    variant=fno_variant)
         return loss_fn
 
     def loss_fn(params, batch):
@@ -39,15 +40,22 @@ def _split_microbatches(batch: Dict[str, jax.Array], n: int):
 
 def make_train_step(cfg, optimizer: AdamW, *, microbatches: int = 1,
                     remat: bool = False, fno_path: str = "xla",
-                    grad_acc_dtype=None):
+                    fno_variant: str = "full", grad_acc_dtype=None):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics).
+
+    fno_path="pallas" trains on the fused kernels end-to-end: the spectral
+    layers carry a custom_vjp whose backward is itself a fused Pallas
+    pipeline (kernels/ops.py), so no staged-XLA fallback is involved.
+    fno_variant picks full (beyond-paper) or partial (paper-faithful)
+    fusion for 2D pallas layers.
 
     grad_acc_dtype: dtype of the gradient-accumulation buffer (default
     f32). The 340B+ archs use bf16 so the FSDP-sharded buffer halves —
     the tradeoff that lets them fit 16 GB/chip at 256 chips
     (EXPERIMENTS.md §Dry-run)."""
-    loss_fn = make_loss_fn(cfg, remat=remat, fno_path=fno_path)
+    loss_fn = make_loss_fn(cfg, remat=remat, fno_path=fno_path,
+                           fno_variant=fno_variant)
     acc_dt = grad_acc_dtype or jnp.float32
 
     def train_step(params, opt_state, batch):

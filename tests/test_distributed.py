@@ -52,12 +52,11 @@ def test_gpipe_matches_sequential(subproc):
     subproc("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.mesh import make_compat_mesh
     from repro.distributed.pipeline import make_gpipe_fn
 
     S, M, mb, d = 4, 6, 2, 16
-    mesh = jax.make_mesh((S,), ("stage",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((S,), ("stage",))
     key = jax.random.PRNGKey(0)
     ws = jax.random.normal(key, (S, d, d)) / d**0.5
     x = jax.random.normal(key, (M, mb, d))
@@ -85,10 +84,10 @@ def test_compressed_psum_error_feedback(subproc):
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.distributed import compression as comp
+    from repro.launch.mesh import make_compat_mesh
 
     n = 8
-    mesh = jax.make_mesh((n,), ("dp",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((n,), ("dp",))
     key = jax.random.PRNGKey(0)
     g = jax.random.normal(key, (n, 64, 64))
 
@@ -167,6 +166,8 @@ def test_reduced_cells_compile_multipod(subproc, arch, shape):
     cell = cm.build_cell("{arch}", "{shape}", mesh, reduced=True)
     j = jax.jit(cell.step_fn, in_shardings=cell.in_shardings)
     co = j.lower(*cell.args).compile()
-    assert co.cost_analysis().get("flops", 0) > 0
+    ca = co.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca  # list-of-dicts on jax 0.4.x
+    assert ca.get("flops", 0) > 0
     print("cell OK", "{arch}", "{shape}")
     """)
