@@ -1,4 +1,4 @@
-"""Training-step benchmark: staged-XLA vs fused Pallas forward+backward.
+"""Training-step benchmark: staged-XLA vs fused Pallas, rank sweep 1D/2D/3D.
 
 The TurboFNO claim extended to training — with the custom_vjp in place the
 backward pass is itself a fused DFT→CGEMM→iDFT pipeline (input cotangent)
@@ -6,8 +6,10 @@ plus a fused rank-reduction kernel (weight cotangent), so a whole
 value_and_grad step runs without the staged path's intermediate HBM
 round-trips.
 
-Two tiers:
-  * layer: value_and_grad through a single spectral layer, 1D and 2D;
+Three tiers:
+  * fwd:   forward-only spectral layer, every rank (1D/2D/3D) — the
+    rank-sweep rows that track the 3D path in the perf trajectory JSON;
+  * layer: value_and_grad through a single spectral layer, every rank;
   * step:  a full FNO AdamW train step (reduced fno2d config).
 
 derived = fused-path speedup over the staged-XLA step. NOTE: off-TPU the
@@ -16,55 +18,78 @@ pallas kernels run in interpret mode, so absolute numbers (and speedups
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn
 
+# Per-rank layer cases: (B, H, O, spatial, modes). 1D/2D keep the paper's
+# sizes (N=256 @ 50% truncation; 64² @ 25%); 3D is the Navier–Stokes-class
+# grid at benchmark-friendly reduced extents.
+_CASES = {
+    1: [(4, 32, 32, (256,), (64,))],
+    2: [(2, 16, 16, (64, 64), (16, 16))],
+    3: [(1, 8, 8, (16, 16, 16), (4, 4, 4))],
+}
+_CASES_SLOW = {
+    1: [(8, 64, 64, (256,), (64,))],
+    2: [(2, 32, 32, (64, 64), (16, 16))],
+    3: [(1, 16, 16, (32, 32, 32), (8, 8, 8))],
+}
 
-def _layer_cases(quick: bool):
-    cases_1d = [(4, 32, 32, 256, 64)]  # B,H,O,N,K — paper N=256, 50% trunc
-    cases_2d = [(2, 16, 16, 64, 64, 16, 16)]
-    if not quick:
-        cases_1d.append((8, 64, 64, 256, 64))
-        cases_2d.append((2, 32, 32, 64, 64, 16, 16))
-    return cases_1d, cases_2d
+_LAYERS = {1: "spectral_layer_1d", 2: "spectral_layer_2d",
+           3: "spectral_layer_3d"}
 
 
-def run(quick: bool = False):
+def _layer_fn(ops, rank: int, modes, path: str):
+    fn = getattr(ops, _LAYERS[rank])
+    m = modes[0] if rank == 1 else tuple(modes)
+    return lambda x, wr, wi: fn(x, wr, wi, m, path=path)
+
+
+def _tag(rank: int, b: int, h: int, spatial) -> str:
+    return f"{rank}d_B{b}H{h}N{'x'.join(map(str, spatial))}"
+
+
+def run(quick: bool = False, ranks: Sequence[int] = (1, 2, 3)):
     from repro.kernels import ops
 
-    print("# bench_train (fwd+bwd): name,us_per_call,derived")
+    print("# bench_train (rank sweep, fwd and fwd+bwd): "
+          "name,us_per_call,derived")
     rng = np.random.default_rng(0)
     mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
-    cases_1d, cases_2d = _layer_cases(quick)
 
     def vag(layer_fn):
         loss = lambda x, wr, wi: jnp.sum(layer_fn(x, wr, wi) ** 2)
         return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
 
-    for b, h, o, n, k in cases_1d:
-        x, wr, wi = mk(b, h, n), mk(o, h) / h, mk(o, h) / h
-        times = {}
-        for path in ("xla", "pallas"):
-            f = vag(lambda x, wr, wi, p=path: ops.spectral_layer_1d(
-                x, wr, wi, k, path=p))
-            times[path] = time_fn(f, x, wr, wi, iters=5)
-            row(f"grad1d_{path}_B{b}H{h}N{n}K{k}", times[path], "")
-        row(f"grad1d_speedup_B{b}H{h}N{n}K{k}", times["pallas"],
-            f"speedup={times['xla'] / times['pallas']:.2f}x")
-
-    for b, h, o, nx, ny, kx, ky in cases_2d:
-        x, wr, wi = mk(b, h, nx, ny), mk(o, h) / h, mk(o, h) / h
-        times = {}
-        for path in ("xla", "pallas"):
-            f = vag(lambda x, wr, wi, p=path: ops.spectral_layer_2d(
-                x, wr, wi, (kx, ky), path=p))
-            times[path] = time_fn(f, x, wr, wi, iters=5)
-            row(f"grad2d_{path}_B{b}H{h}XY{nx}K{kx}", times[path], "")
-        row(f"grad2d_speedup_B{b}H{h}XY{nx}K{kx}", times["pallas"],
-            f"speedup={times['xla'] / times['pallas']:.2f}x")
+    for rank in ranks:
+        cases = list(_CASES[rank])
+        if not quick:
+            cases += _CASES_SLOW[rank]
+        for b, h, o, spatial, modes in cases:
+            x = mk(b, h, *spatial)
+            wr, wi = mk(o, h) / h, mk(o, h) / h
+            tag = _tag(rank, b, h, spatial)
+            # forward-only sweep
+            times = {}
+            for path in ("xla", "pallas"):
+                f = jax.jit(_layer_fn(ops, rank, modes, path))
+                times[path] = time_fn(f, x, wr, wi, iters=5)
+                row(f"fwd{tag}_{path}", times[path], "")
+            row(f"fwd{tag}_speedup", times["pallas"],
+                f"speedup={times['xla'] / times['pallas']:.2f}x")
+            # fwd+bwd sweep
+            times = {}
+            for path in ("xla", "pallas"):
+                f = vag(_layer_fn(ops, rank, modes, path))
+                times[path] = time_fn(f, x, wr, wi, iters=5)
+                row(f"grad{tag}_{path}", times[path], "")
+            row(f"grad{tag}_speedup", times["pallas"],
+                f"speedup={times['xla'] / times['pallas']:.2f}x")
 
     # full train step on the reduced 2D config
     from repro.configs import get_config

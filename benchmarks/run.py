@@ -19,7 +19,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: prune,kernels,fft_opt,"
                          "fusion,e2e,train")
+    ap.add_argument("--ranks", default="1,2,3",
+                    help="spatial ranks for the train rank sweep "
+                         "(e.g. --ranks 3 tracks only the 3D path)")
     args = ap.parse_args()
+    try:
+        ranks = tuple(int(r) for r in args.ranks.split(","))
+    except ValueError:
+        ranks = ()
+    if not ranks or any(r not in (1, 2, 3) for r in ranks):
+        ap.error(f"--ranks must be a comma-separated subset of 1,2,3 "
+                 f"(got {args.ranks!r})")
 
     from benchmarks import (bench_e2e, bench_fft_opt, bench_fusion,
                             bench_kernels, bench_prune, bench_train)
@@ -29,7 +39,7 @@ def main() -> None:
         "fft_opt": lambda: bench_fft_opt.run(args.quick),
         "fusion": lambda: bench_fusion.run(args.quick),
         "e2e": lambda: bench_e2e.run(args.quick),
-        "train": lambda: bench_train.run(args.quick),
+        "train": lambda: bench_train.run(args.quick, ranks=ranks),
     }
     only = args.only.split(",") if args.only else list(table)
     for name in only:

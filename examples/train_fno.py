@@ -10,6 +10,10 @@ accelerator — one step is ~0.9 TFLOP at batch 8):
 
     PYTHONPATH=src python examples/train_fno.py --full --steps 300 \
         --batch 8 --lr 3e-4
+
+Rank sweep: --arch fno1d / fno2d / fno3d trains the matching PDE task
+(Burgers / Darcy / 3D diffusion-reaction) through the same rank-generic
+fused engine.
 """
 import argparse
 import tempfile
@@ -30,18 +34,26 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--arch", default=None,
+                    choices=["fno1d", "fno2d", "fno2d-large", "fno3d"],
+                    help="architecture/rank; picks the matching PDE task "
+                         "(Burgers 1D / Darcy 2D / diffusion-reaction 3D)")
     ap.add_argument("--full", action="store_true",
-                    help="fno2d-large (~134M params, per-mode weights)")
+                    help="fno2d-large (~134M params, per-mode weights); "
+                         "shorthand for --arch fno2d-large at full size")
     ap.add_argument("--path", default="xla", choices=["ref", "xla", "pallas"],
                     help="pallas = fused kernels fwd AND bwd (custom_vjp); "
                          "no staged-XLA fallback")
     ap.add_argument("--variant", default="full", choices=["full", "partial"],
-                    help="2D pallas fusion: full (beyond-paper) or partial "
-                         "(paper-faithful; shared weights only)")
+                    help="2D/3D pallas fusion: full (beyond-paper) or "
+                         "partial (paper-faithful)")
     args = ap.parse_args()
 
-    cfg = get_config("fno2d-large" if args.full else "fno2d",
-                     reduced=not args.full)
+    if args.full and args.arch not in (None, "fno2d-large"):
+        ap.error("--full selects fno2d-large; it conflicts with "
+                 f"--arch {args.arch}")
+    arch = args.arch or ("fno2d-large" if args.full else "fno2d")
+    cfg = get_config(arch, reduced=not args.full)
     key = jax.random.PRNGKey(0)
     params = fno.init_fno(key, cfg)
     n = cfg.spatial[0]
@@ -54,8 +66,13 @@ def main():
                 weight_decay=0.0)
     step = jax.jit(make_train_step(cfg, opt, fno_path=args.path,
                                    fno_variant=args.variant))
-    batch_fn = lambda i: pde.darcy_batch(0, i, args.batch, n,
-                                         iters=150 if args.full else 100)
+    if cfg.ndim == 1:
+        batch_fn = lambda i: pde.burgers_batch(0, i, args.batch, n)
+    elif cfg.ndim == 2:
+        batch_fn = lambda i: pde.darcy_batch(0, i, args.batch, n,
+                                             iters=150 if args.full else 100)
+    else:
+        batch_fn = lambda i: pde.diffusion3d_batch(0, i, args.batch, n)
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
         tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=50,

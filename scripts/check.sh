@@ -4,4 +4,12 @@
 # (e.g. scripts/check.sh -x -k kernels).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# Collection gate: when pytest selection args (-k/-m/paths) could deselect
+# a broken module, a full collect-only pass must still fail the script on
+# any collection error. A bare run needs no gate — pytest itself exits
+# nonzero on collection errors.
+if [ "$#" -gt 0 ]; then
+  python -m pytest -q --collect-only >/dev/null
+fi
+exec python -m pytest -q "$@"

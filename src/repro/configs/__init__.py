@@ -32,6 +32,7 @@ _FNO_FACTORIES = {
     "fno1d": (fno.fno1d, fno.reduced_1d),
     "fno2d": (fno.fno2d, fno.reduced_2d),
     "fno2d-large": (fno.fno2d_large, fno.reduced_2d),
+    "fno3d": (fno.fno3d, fno.reduced_3d),
 }
 
 ARCH_IDS: Tuple[str, ...] = tuple(_ARCH_MODULES)

@@ -158,12 +158,12 @@ class FNOConfig:
     """Fourier Neural Operator configuration (the paper's architecture)."""
 
     name: str
-    ndim: int  # 1 or 2
+    ndim: int  # 1, 2, or 3
     hidden: int  # HiddenDim (channels)
     num_layers: int
     in_channels: int
     out_channels: int
-    spatial: Tuple[int, ...]  # (N,) or (X, Y)
+    spatial: Tuple[int, ...]  # (N,), (X, Y), or (X, Y, Z)
     modes: Tuple[int, ...]  # kept low-frequency modes per spatial axis
     weight_mode: str = "shared"  # shared (paper CGEMM) | per_mode (classic FNO)
     lifting_dim: int = 0  # 0 => 2*hidden
@@ -188,7 +188,7 @@ class FNOConfig:
         return p
 
     def validate(self) -> None:
-        assert self.ndim in (1, 2) and len(self.spatial) == self.ndim
+        assert self.ndim in (1, 2, 3) and len(self.spatial) == self.ndim
         assert len(self.modes) == self.ndim
         for m, s in zip(self.modes, self.spatial):
             assert 0 < m <= s // 2, (

@@ -1,10 +1,12 @@
-"""Fourier Neural Operator models (1D / 2D), built on SpectralConv.
+"""Fourier Neural Operator models (1D / 2D / 3D), built on SpectralConv.
 
 Architecture (paper Fig. 1 / Li et al. 2020):
   lifting pointwise MLP  →  L × [spectral conv + 1x1 bypass conv + GELU]
   →  projection pointwise MLP.
 
-Functional params-as-pytree; channel-first [B, C, *spatial].
+Rank is taken from ``cfg.ndim`` — the 3D variant (Navier–Stokes-class
+workloads, Li et al. §5.3) runs on the same rank-generic fused engine as
+1D/2D. Functional params-as-pytree; channel-first [B, C, *spatial].
 """
 from __future__ import annotations
 
@@ -34,8 +36,7 @@ def init_fno(key: jax.Array, cfg: FNOConfig) -> Dict[str, Any]:
     dtype = jnp.dtype(cfg.dtype)
     lift = cfg.lifting_dim or 2 * cfg.hidden
     keys = jax.random.split(key, 4 + 2 * cfg.num_layers)
-    init_sc = sc.init_spectral_1d if cfg.ndim == 1 else sc.init_spectral_2d
-    modes = cfg.modes[0] if cfg.ndim == 1 else tuple(cfg.modes)
+    modes = tuple(cfg.modes)
     params: Dict[str, Any] = {
         "lift1": _dense_init(keys[0], cfg.in_channels, lift, dtype),
         "lift2": _dense_init(keys[1], lift, cfg.hidden, dtype),
@@ -45,8 +46,9 @@ def init_fno(key: jax.Array, cfg: FNOConfig) -> Dict[str, Any]:
     }
     for i in range(cfg.num_layers):
         params["blocks"].append({
-            "spectral": init_sc(keys[4 + 2 * i], cfg.hidden, cfg.hidden,
-                                modes, cfg.weight_mode, dtype),
+            "spectral": sc.init_spectral_nd(keys[4 + 2 * i], cfg.hidden,
+                                            cfg.hidden, modes,
+                                            cfg.weight_mode, dtype),
             "bypass": _dense_init(keys[5 + 2 * i], cfg.hidden, cfg.hidden,
                                   dtype),
         })
@@ -62,8 +64,11 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
         if cfg.ndim == 1:
             s = sc.apply_spectral_1d(blk["spectral"], h, cfg.modes[0],
                                      path=path)
-        else:
+        elif cfg.ndim == 2:
             s = sc.apply_spectral_2d(blk["spectral"], h, tuple(cfg.modes),
+                                     path=path, variant=variant)
+        else:
+            s = sc.apply_spectral_3d(blk["spectral"], h, tuple(cfg.modes),
                                      path=path, variant=variant)
         h = jax.nn.gelu(s + _dense(blk["bypass"], h))
     return _dense(params["proj2"], jax.nn.gelu(_dense(params["proj1"], h)))

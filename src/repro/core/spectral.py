@@ -127,6 +127,100 @@ def cdft_adjoint_mats(n: int, modes: int, inverse: bool = False,
 
 
 # ---------------------------------------------------------------------------
+# Rank-generic fused-kernel operand bundles (cached host constants).
+#
+# The engine (kernels/engine.py) consumes a flat tuple of (real, imag)
+# operand pairs: R forward stages in kernel order (axis s_R first, each
+# [n, k]) then R inverse stages (axis s_1 first, each [k, n]). adjoint=True
+# swaps every operand for its transpose — the backward input-cotangent
+# pipeline (see the adjoint-factory comment above). These are lru_cached on
+# (spatial, modes, dtype, adjoint, pad) so repeated layer calls/traces stop
+# rebuilding the O(N·K) matrices. They return NUMPY arrays on purpose:
+# jnp constants created inside a jit trace are tracers, and caching a
+# tracer across traces is a leak — numpy constants are constified safely
+# by whichever trace consumes them.
+# ---------------------------------------------------------------------------
+def _pad_np(a: np.ndarray, axis: int, to: int) -> np.ndarray:
+    if a.shape[axis] >= to:
+        return a
+    cfg = [(0, 0)] * a.ndim
+    cfg[axis] = (0, to - a.shape[axis])
+    return np.pad(a, cfg)
+
+
+def _fused_mat_pairs(spatial, modes, adjoint, dtype):
+    """numpy (mr, mi) pairs: R forward-slot then R inverse-slot operands."""
+    r = len(spatial)
+    fwd, inv = [], []
+    for i in range(r):  # forward stages transform axes s_R, s_{R-1}, …, s_1
+        ax = r - 1 - i
+        n, k = spatial[ax], modes[ax]
+        if ax == r - 1:  # the real-input axis
+            fwd.append(irdft_adjoint_mats(n, k, dtype) if adjoint
+                       else rdft_mats(n, k, dtype))
+        else:
+            fwd.append(cdft_adjoint_mats(n, k, True, dtype) if adjoint
+                       else cdft_mats(n, k, False, dtype))
+    for ax in range(r):  # inverse stages transform axes s_1, …, s_R
+        n, k = spatial[ax], modes[ax]
+        if ax == r - 1:
+            inv.append(rdft_adjoint_mats(n, k, dtype) if adjoint
+                       else irdft_mats(n, k, dtype))
+        else:
+            inv.append(cdft_adjoint_mats(n, k, False, dtype) if adjoint
+                       else cdft_mats(n, k, True, dtype))
+    return fwd + inv
+
+
+@functools.lru_cache(maxsize=256)
+def fused_operand_mats(spatial: Tuple[int, ...], modes: Tuple[int, ...],
+                       dtype: str = "float32", adjoint: bool = False,
+                       pad_modes_to: int = 0) -> Tuple[np.ndarray, ...]:
+    """Flat operand tuple for the rank-generic fused forward/adjoint
+    kernel: (cr,ci) per forward stage then (er,ei) per inverse stage.
+
+    pad_modes_to zero-pads every modes axis up to the given extent (used by
+    the rank-1 path, where K is the minor lane dim and must be
+    128-aligned); padded rows/cols contribute exactly zero through the
+    linear pipeline.
+    """
+    r = len(spatial)
+    dt = jnp.dtype(dtype)
+    out = []
+    for idx, (mr, mi) in enumerate(_fused_mat_pairs(spatial, modes, adjoint,
+                                                    "float32")):
+        if pad_modes_to:
+            axis = 1 if idx < r else 0  # fwd [n,k] pads cols; inv [k,n] rows
+            mr = _pad_np(mr, axis, pad_modes_to)
+            mi = _pad_np(mi, axis, pad_modes_to)
+        out.append(np.asarray(mr, dt))
+        out.append(np.asarray(mi, dt))
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=256)
+def wgrad_operand_mats(spatial: Tuple[int, ...], modes: Tuple[int, ...],
+                       dtype: str = "float32",
+                       pad_modes_to: int = 0) -> Tuple[np.ndarray, ...]:
+    """Flat operand tuple for the fused weight-gradient kernel: R forward
+    stages for the primal spectrum A, then R adjoint-forward stages
+    (transposed inverse transforms) that push the output cotangent into the
+    spectral domain as Ĝ. All [n, k]-oriented, axis s_R first."""
+    r = len(spatial)
+    dt = jnp.dtype(dtype)
+    pairs = (_fused_mat_pairs(spatial, modes, False, "float32")[:r]
+             + _fused_mat_pairs(spatial, modes, True, "float32")[:r])
+    out = []
+    for mr, mi in pairs:
+        if pad_modes_to:
+            mr = _pad_np(mr, 1, pad_modes_to)
+            mi = _pad_np(mi, 1, pad_modes_to)
+        out.append(np.asarray(mr, dt))
+        out.append(np.asarray(mi, dt))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # XLA-path transforms (matmul formulation; fused by XLA, no Pallas)
 # ---------------------------------------------------------------------------
 def truncated_rdft(x: jax.Array, modes: int) -> Tuple[jax.Array, jax.Array]:

@@ -1,12 +1,12 @@
 """SpectralConv modules — the FNO Fourier layer with selectable execution
-path (ref | xla | pallas) and weight mode (shared | per_mode).
+path (ref | xla | pallas) and weight mode (shared | per_mode), rank 1/2/3.
 
 Functional style: ``init(key) -> params``, ``apply(params, x) -> y``.
 Channel-first layout [B, C, *spatial], matching the paper.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,14 +14,23 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 
-def init_spectral_1d(key: jax.Array, in_ch: int, out_ch: int, modes: int,
-                     weight_mode: str = "shared",
+def init_spectral_nd(key: jax.Array, in_ch: int, out_ch: int,
+                     modes: Sequence[int], weight_mode: str = "shared",
                      dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Rank-generic spectral-weight init: W [O,I] shared (the paper's
+    CGEMM) or [O,I,k_1..k_R] per-mode (classic FNO)."""
     scale = 1.0 / (in_ch * out_ch) ** 0.5
-    shape = (out_ch, in_ch) if weight_mode == "shared" else (out_ch, in_ch, modes)
+    shape = ((out_ch, in_ch) if weight_mode == "shared"
+             else (out_ch, in_ch) + tuple(modes))
     kr, ki = jax.random.split(key)
     return {"wr": scale * jax.random.normal(kr, shape, dtype),
             "wi": scale * jax.random.normal(ki, shape, dtype)}
+
+
+def init_spectral_1d(key: jax.Array, in_ch: int, out_ch: int, modes: int,
+                     weight_mode: str = "shared",
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return init_spectral_nd(key, in_ch, out_ch, (modes,), weight_mode, dtype)
 
 
 def apply_spectral_1d(params: Dict[str, jax.Array], x: jax.Array, modes: int,
@@ -34,12 +43,7 @@ def apply_spectral_1d(params: Dict[str, jax.Array], x: jax.Array, modes: int,
 def init_spectral_2d(key: jax.Array, in_ch: int, out_ch: int,
                      modes: Tuple[int, int], weight_mode: str = "shared",
                      dtype=jnp.float32) -> Dict[str, jax.Array]:
-    scale = 1.0 / (in_ch * out_ch) ** 0.5
-    shape = ((out_ch, in_ch) if weight_mode == "shared"
-             else (out_ch, in_ch) + tuple(modes))
-    kr, ki = jax.random.split(key)
-    return {"wr": scale * jax.random.normal(kr, shape, dtype),
-            "wi": scale * jax.random.normal(ki, shape, dtype)}
+    return init_spectral_nd(key, in_ch, out_ch, modes, weight_mode, dtype)
 
 
 def apply_spectral_2d(params: Dict[str, jax.Array], x: jax.Array,
@@ -47,4 +51,18 @@ def apply_spectral_2d(params: Dict[str, jax.Array], x: jax.Array,
                       variant: str = "full", **kw) -> jax.Array:
     """x: [B, C_in, X, Y] -> [B, C_out, X, Y]."""
     return ops.spectral_layer_2d(x, params["wr"], params["wi"], modes,
+                                 path=path, variant=variant, **kw)
+
+
+def init_spectral_3d(key: jax.Array, in_ch: int, out_ch: int,
+                     modes: Tuple[int, int, int], weight_mode: str = "shared",
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return init_spectral_nd(key, in_ch, out_ch, modes, weight_mode, dtype)
+
+
+def apply_spectral_3d(params: Dict[str, jax.Array], x: jax.Array,
+                      modes: Tuple[int, int, int], *, path: str = "xla",
+                      variant: str = "full", **kw) -> jax.Array:
+    """x: [B, C_in, X, Y, Z] -> [B, C_out, X, Y, Z]."""
+    return ops.spectral_layer_3d(x, params["wr"], params["wi"], modes,
                                  path=path, variant=variant, **kw)

@@ -5,6 +5,10 @@
 * Darcy 2D:   -∇·(a(x)∇u) = f on the unit square, u=0 on ∂Ω; piecewise-
   constant a from a thresholded GRF; solved with Jacobi-preconditioned CG
   on a finite-difference stencil (pure jnp, fixed iteration count).
+* Diffusion 3D: u_t = ν·Δu + r·u on the periodic unit cube, solved exactly
+  in spectral space (each Fourier mode decays as exp((r − ν|2πk|²)T)) —
+  the rank-3 operator-learning substrate for FNO3d without a costly
+  time-stepper.
 
 Everything is stateless and seeded: batch i of a run is a pure function of
 (seed, i), so any host can regenerate any shard after failover
@@ -46,6 +50,25 @@ def grf_2d(key, batch: int, n: int, alpha: float = 2.0, tau: float = 3.0
     return jnp.fft.irfft2(coef, s=(n, n), axes=(-2, -1))
 
 
+def _k2_grid_3d(n: int) -> jax.Array:
+    """|k|² over the rfftn layout [n, n, n//2+1] (integer wavenumbers)."""
+    kf = jnp.fft.fftfreq(n, 1.0 / n)
+    kr = jnp.fft.rfftfreq(n, 1.0 / n)
+    return (kf[:, None, None] ** 2 + kf[None, :, None] ** 2
+            + kr[None, None, :] ** 2)
+
+
+def grf_3d(key, batch: int, n: int, alpha: float = 2.5, tau: float = 3.0
+           ) -> jax.Array:
+    k2 = _k2_grid_3d(n)
+    spec = (k2 + tau ** 2) ** (-alpha / 2.0)
+    kr, ki = jax.random.split(key)
+    shape = (batch,) + k2.shape
+    coef = ((jax.random.normal(kr, shape) + 1j * jax.random.normal(ki, shape))
+            * spec * n ** 1.5)
+    return jnp.fft.irfftn(coef, s=(n, n, n), axes=(-3, -2, -1))
+
+
 # ---------------------------------------------------------------------------
 # Burgers 1D
 # ---------------------------------------------------------------------------
@@ -83,6 +106,37 @@ def burgers_batch(seed: int, index: int, batch: int, n: int = 256,
     uT = burgers_solve(u0, nu=nu, n=n)
     return {"x": u0[:, None, :].astype(jnp.float32),
             "y": uT[:, None, :].astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Diffusion-reaction 3D (periodic cube, exact spectral propagator)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def diffusion3d_solve(u0: jax.Array, *, nu: float = 0.05, r: float = 1.0,
+                      t_final: float = 0.25, n: int = 16) -> jax.Array:
+    """u_t = ν·Δu + r·u on the periodic unit cube — exact in Fourier space.
+
+    u0: [B, n, n, n] -> u(T): [B, n, n, n]. Each mode k evolves as
+    exp((r − ν·|2πk|²)·T): low modes grow (reaction), high modes decay
+    (diffusion) — a non-trivial but analytically exact operator target.
+    """
+    decay = jnp.exp((r - nu * (2.0 * jnp.pi) ** 2 * _k2_grid_3d(n))
+                    * t_final)
+    uh = jnp.fft.rfftn(u0, axes=(-3, -2, -1))
+    return jnp.fft.irfftn(uh * decay, s=(n, n, n), axes=(-3, -2, -1))
+
+
+def diffusion3d_batch(seed: int, index: int, batch: int, n: int = 16,
+                      nu: float = 0.05) -> Dict[str, jax.Array]:
+    """Deterministic batch `index`: x = [B,1,n,n,n] u0, y = [B,1,n,n,n]
+    u(T). Stateless-seeded like the 1D/2D tasks (failover-regenerable)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 333), index)
+    u0 = grf_3d(key, batch, n)
+    u0 = u0 / (jnp.std(u0.reshape(batch, -1), axis=-1)
+               .reshape(batch, 1, 1, 1) + 1e-6)
+    uT = diffusion3d_solve(u0, nu=nu, n=n)
+    return {"x": u0[:, None].astype(jnp.float32),
+            "y": uT[:, None].astype(jnp.float32)}
 
 
 # ---------------------------------------------------------------------------

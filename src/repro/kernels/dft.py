@@ -56,6 +56,37 @@ def _rdft_call(x2d: jax.Array, cr: jax.Array, ci: jax.Array,
     )(x2d, cr, ci)
 
 
+def _cdft_kernel(xr_ref, xi_ref, fr_ref, fi_ref, or_ref, oi_ref):
+    """Complex-to-complex truncated DFT / padded iDFT (the operand decides
+    which): 4 real MXU matmuls."""
+    xr, xi = xr_ref[...], xi_ref[...]
+    fr, fi = fr_ref[...], fi_ref[...]
+    dot = lambda a, b: jax.lax.dot(a, b, preferred_element_type=_F32)
+    or_ref[...] = (dot(xr, fr) - dot(xi, fi)).astype(or_ref.dtype)
+    oi_ref[...] = (dot(xr, fi) + dot(xi, fr)).astype(oi_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _cdft_call(xr2d: jax.Array, xi2d: jax.Array, fr: jax.Array,
+               fi: jax.Array, block_rows: int,
+               interpret: bool) -> Tuple[jax.Array, jax.Array]:
+    m, n = xr2d.shape
+    k = fr.shape[1]
+    grid = (m // block_rows,)
+    spec_x = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    spec_m = pl.BlockSpec((n, k), lambda i: (0, 0))
+    spec_o = pl.BlockSpec((block_rows, k), lambda i: (i, 0))
+    out_sd = jax.ShapeDtypeStruct((m, k), xr2d.dtype)
+    return pl.pallas_call(
+        _cdft_kernel,
+        grid=grid,
+        in_specs=[spec_x, spec_x, spec_m, spec_m],
+        out_specs=[spec_o, spec_o],
+        out_shape=[out_sd, out_sd],
+        interpret=interpret,
+    )(xr2d, xi2d, fr, fi)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def _irdft_call(xr2d: jax.Array, xi2d: jax.Array, er: jax.Array, ei: jax.Array,
                 block_rows: int, interpret: bool) -> jax.Array:

@@ -1,198 +1,20 @@
-"""Fused truncated-rDFT → CGEMM → padded-irDFT Pallas kernel (1D FNO layer).
+"""Compatibility wrappers for the 1D fused FNO kernels.
 
-This is the paper's core contribution (§4.3) mapped to TPU:
-
-  * grid = (batch tiles, out-channel tiles, hidden tiles) with the HIDDEN
-    axis innermost — the FFT "pencils" are selected along the GEMM k-loop
-    direction exactly as in paper Fig. 6(c);
-  * per program, the truncated forward DFT of the x-slice is computed
-    straight into VMEM registers and consumed as the CGEMM A-tile — the
-    shared-memory forwarding of Fig. 7 with no HBM round trip;
-  * the iDFT runs as the CGEMM epilogue on the VMEM accumulator — Fig. 8;
-  * truncation/zero-padding/pruning are implicit in the DFT operand shapes.
-
-Layout note (the TPU replacement for warp swizzling): every contraction is
-arranged so no operand needs an in-kernel transpose —
-
-    x[bb,bh,N] · Cr[N,K]                  -> A[bb,bh,K]
-    A[bb,bh,K] ·(bh) W[bo,bh]             -> acc[bb,K,bo]   (shared W)
-    acc[bb,K,bo] ·(K) Er[K,N]             -> y[bb,bo,N]
-
-i.e. the accumulator is laid out [batch, modes, out] so that both the CGEMM
-accumulation and the iDFT epilogue are plain dot_generals over the minor
-dims. For per-mode weights W[bo,bh,K] the accumulator is [K,bb,bo] with K as
-a batched dot dimension.
+The kernel bodies moved to the rank-generic engine
+(``repro.kernels.engine``), which emits the same grid/accumulator layout
+for every spatial rank — see engine.py's module docstring for the layout
+notes that used to live here. These wrappers pin rank 1 and preserve the
+original positional-operand signatures.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import _compiler_params
-
-_F32 = jnp.float32
+from repro.kernels import engine
 
 
-def _dot(a, b, dims):
-    return jax.lax.dot_general(a, b, (dims, ((), ())),
-                               preferred_element_type=_F32)
-
-
-def _fused_kernel_shared(x_ref, wr_ref, wi_ref, cr_ref, ci_ref, er_ref,
-                         ei_ref, y_ref, accr, acci):
-    """Shared-weight (paper CGEMM) variant. Block shapes:
-    x[bb,bh,N] w[bo,bh] c[N,K] e[K,N] y[bb,bo,N] acc[bb,K,bo]."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        accr[...] = jnp.zeros_like(accr)
-        acci[...] = jnp.zeros_like(acci)
-
-    x = x_ref[...]
-    # Truncated forward rDFT along N — the "FFT writing its A-tile to smem".
-    ar = _dot(x, cr_ref[...], (((2,), (0,))))  # [bb,bh,K]
-    ai = _dot(x, ci_ref[...], (((2,), (0,))))
-    # CGEMM over hidden (the k-loop MAC): contract bh -> acc[bb,K,bo].
-    wr, wi = wr_ref[...], wi_ref[...]
-    accr[...] += _dot(ar, wr, (((1,), (1,)))) - _dot(ai, wi, (((1,), (1,))))
-    acci[...] += _dot(ar, wi, (((1,), (1,)))) + _dot(ai, wr, (((1,), (1,))))
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        # Padded irDFT epilogue: contract K -> y[bb,bo,N].
-        yr = _dot(accr[...], er_ref[...], (((1,), (0,))))
-        yi = _dot(acci[...], ei_ref[...], (((1,), (0,))))
-        y_ref[...] = (yr - yi).astype(y_ref.dtype)
-
-
-def _fused_kernel_permode(x_ref, wr_ref, wi_ref, cr_ref, ci_ref, er_ref,
-                          ei_ref, y_ref, accr, acci):
-    """Per-mode-weight (classic FNO) variant. w[bo,bh,K]; acc[K,bb,bo]."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        accr[...] = jnp.zeros_like(accr)
-        acci[...] = jnp.zeros_like(acci)
-
-    x = x_ref[...]
-    ar = _dot(x, cr_ref[...], (((2,), (0,))))  # [bb,bh,K]
-    ai = _dot(x, ci_ref[...], (((2,), (0,))))
-    wr, wi = wr_ref[...], wi_ref[...]
-
-    def bdot(a, w):  # batched over K: [bb,bh,K]x[bo,bh,K] -> [K,bb,bo]
-        return jax.lax.dot_general(
-            a, w, (((1,), (1,)), ((2,), (2,))), preferred_element_type=_F32)
-
-    accr[...] += bdot(ar, wr) - bdot(ai, wi)
-    acci[...] += bdot(ar, wi) + bdot(ai, wr)
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        yr = _dot(accr[...], er_ref[...], (((0,), (0,))))  # [bb,bo,N]
-        yi = _dot(acci[...], ei_ref[...], (((0,), (0,))))
-        y_ref[...] = (yr - yi).astype(y_ref.dtype)
-
-
-# ---------------------------------------------------------------------------
-# Fused weight-gradient kernel (backward pass of the spectral layer).
-#
-# With A = DFT(x) ([B,H,K] complex) and G = g @ Eᵀ (the output cotangent
-# pushed into the spectral domain, [B,O,K] complex), the weight cotangent is
-#
-#     dW[o,h(,m)] = conj( Σ_b G[b,o,m]·A[b,h,m] )     (Σ_m too when shared)
-#
-# — a fused rank-reduction: both DFTs are computed straight into VMEM and
-# consumed by the reduction without an HBM round trip, mirroring the forward
-# kernel's Fig. 7 forwarding. Grid = (out tiles, hidden tiles, batch tiles)
-# with BATCH innermost as the accumulation loop.
-# ---------------------------------------------------------------------------
-def _wgrad_kernel(x_ref, g_ref, cr_ref, ci_ref, etr_ref, eti_ref,
-                  dwr_ref, dwi_ref, accr, acci):
-    """Blocks: x[bb,bh,N] g[bb,bo,N] c[N,K] et[N,K];
-    dw[bo,bh] shared / dw[K,bo,bh] per-mode (caller transposes; acc matches
-    dw)."""
-    per_mode = dwr_ref.ndim == 3
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        accr[...] = jnp.zeros_like(accr)
-        acci[...] = jnp.zeros_like(acci)
-
-    x, g = x_ref[...], g_ref[...]
-    ar = _dot(x, cr_ref[...], (((2,), (0,))))   # A = DFT(x): [bb,bh,K]
-    ai = _dot(x, ci_ref[...], (((2,), (0,))))
-    gr = _dot(g, etr_ref[...], (((2,), (0,))))  # G = g@Eᵀ: [bb,bo,K]
-    gi = _dot(g, eti_ref[...], (((2,), (0,))))
-
-    if per_mode:
-        def rdot(p, q):  # batched over K: [bb,bo,K]x[bb,bh,K] -> [K,bo,bh]
-            return jax.lax.dot_general(p, q, (((0,), (0,)), ((2,), (2,))),
-                                       preferred_element_type=_F32)
-    else:
-        def rdot(p, q):  # contract (b, K): [bb,bo,K]x[bb,bh,K] -> [bo,bh]
-            return jax.lax.dot_general(p, q, (((0, 2), (0, 2)), ((), ())),
-                                       preferred_element_type=_F32)
-
-    accr[...] += rdot(gr, ar) - rdot(gi, ai)
-    acci[...] += rdot(gr, ai) + rdot(gi, ar)
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        # dW = conj(acc): real part as-is, imaginary part negated.
-        dwr_ref[...] = accr[...].astype(dwr_ref.dtype)
-        dwi_ref[...] = (-acci[...]).astype(dwi_ref.dtype)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bb", "bo", "bh", "per_mode", "interpret"))
-def fused_fno1d_wgrad_call(x: jax.Array, g: jax.Array, cr: jax.Array,
-                           ci: jax.Array, etr: jax.Array, eti: jax.Array,
-                           bb: int, bo: int, bh: int, per_mode: bool,
-                           interpret: bool = False
-                           ) -> Tuple[jax.Array, jax.Array]:
-    """x: [B,H,N] primal; g: [B,O,N] cotangent; c,et: [N,K].
-
-    Returns (dwr, dwi): [O,H] shared, or [K,O,H] per-mode (caller transposes
-    back to [O,H,K]). All of B,O,H must divide by (bb,bo,bh); K,N whole
-    blocks (ops.py pads).
-    """
-    b, h, n = x.shape
-    o = g.shape[1]
-    k = cr.shape[1]
-    grid = (o // bo, h // bh, b // bb)
-
-    x_spec = pl.BlockSpec((bb, bh, n), lambda i, j, kb: (kb, j, 0))
-    g_spec = pl.BlockSpec((bb, bo, n), lambda i, j, kb: (kb, i, 0))
-    m_spec = pl.BlockSpec((n, k), lambda i, j, kb: (0, 0))
-    if per_mode:
-        dw_spec = pl.BlockSpec((k, bo, bh), lambda i, j, kb: (0, i, j))
-        dw_shape = (k, o, h)
-        acc_shape = (k, bo, bh)
-    else:
-        dw_spec = pl.BlockSpec((bo, bh), lambda i, j, kb: (i, j))
-        dw_shape = (o, h)
-        acc_shape = (bo, bh)
-    out_sd = jax.ShapeDtypeStruct(dw_shape, x.dtype)
-
-    return pl.pallas_call(
-        _wgrad_kernel,
-        grid=grid,
-        in_specs=[x_spec, g_spec, m_spec, m_spec, m_spec, m_spec],
-        out_specs=[dw_spec, dw_spec],
-        out_shape=[out_sd, out_sd],
-        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
-                        pltpu.VMEM(acc_shape, _F32)],
-        compiler_params=_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(x, g, cr, ci, etr, eti)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
 def fused_fno1d_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
                      cr: jax.Array, ci: jax.Array, er: jax.Array,
                      ei: jax.Array, bb: int, bo: int, bh: int,
@@ -202,34 +24,21 @@ def fused_fno1d_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     All of B,O,H must divide by (bb,bo,bh); K,N are whole blocks (ops.py
     pads everything to (8,128)-aligned shapes).
     """
-    b, h, n = x.shape
-    o = wr.shape[0]
-    k = cr.shape[1]
-    per_mode = wr.ndim == 3
-    grid = (b // bb, o // bo, h // bh)
+    return engine.fused_fnond_call(x, wr, wi, cr, ci, er, ei,
+                                   bb=bb, bo=bo, bh=bh, interpret=interpret)
 
-    x_spec = pl.BlockSpec((bb, bh, n), lambda i, j, kk: (i, kk, 0))
-    if per_mode:
-        w_spec = pl.BlockSpec((bo, bh, k), lambda i, j, kk: (j, kk, 0))
-        acc_shape = (k, bb, bo)
-        kernel = _fused_kernel_permode
-    else:
-        w_spec = pl.BlockSpec((bo, bh), lambda i, j, kk: (j, kk))
-        acc_shape = (bb, k, bo)
-        kernel = _fused_kernel_shared
-    c_spec = pl.BlockSpec((n, k), lambda i, j, kk: (0, 0))
-    e_spec = pl.BlockSpec((k, n), lambda i, j, kk: (0, 0))
-    y_spec = pl.BlockSpec((bb, bo, n), lambda i, j, kk: (i, j, 0))
 
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[x_spec, w_spec, w_spec, c_spec, c_spec, e_spec, e_spec],
-        out_specs=y_spec,
-        out_shape=jax.ShapeDtypeStruct((b, o, n), x.dtype),
-        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
-                        pltpu.VMEM(acc_shape, _F32)],
-        compiler_params=_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(x, wr, wi, cr, ci, er, ei)
+def fused_fno1d_wgrad_call(x: jax.Array, g: jax.Array, cr: jax.Array,
+                           ci: jax.Array, etr: jax.Array, eti: jax.Array,
+                           bb: int, bo: int, bh: int, per_mode: bool,
+                           interpret: bool = False
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,H,N] primal; g: [B,O,N] cotangent; c,et: [N,K].
+
+    Returns (dwr, dwi): [O,H] shared, or [K,O,H] per-mode (caller
+    transposes back to [O,H,K]).
+    """
+    return engine.fused_fnond_wgrad_call(x, g, cr, ci, etr, eti,
+                                         bb=bb, bo=bo, bh=bh,
+                                         per_mode=per_mode,
+                                         interpret=interpret)

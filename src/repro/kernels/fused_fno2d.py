@@ -1,272 +1,37 @@
-"""Fused 2D FNO-layer Pallas kernels.
+"""Compatibility wrappers for the 2D fused FNO kernels.
 
-Two variants:
+The kernel bodies moved to the rank-generic engine
+(``repro.kernels.engine``). These wrappers pin rank 2 and preserve the
+original positional-operand signatures:
 
-* ``fused_fno2d_call`` — paper-faithful partial fusion (§4.3, Fig. 6): the
-  stage-1 truncated rDFT along Y runs as a separate kernel (see dft.py); this
-  kernel fuses [truncated cDFT along X → CGEMM over hidden → padded icDFT
-  along X], operating on complex stage-1 output. Matches TurboFNO, which
-  fuses only the FFT stage adjacent to the GEMM.
-
-* ``fused_fno2d_full_call`` — BEYOND-paper full fusion: the entire layer
-  [rDFT_Y → cDFT_X → CGEMM → icDFT_X → irDFT_Y] in one kernel. Possible on
-  TPU because FNO's out-channel count fits a single lane tile (O ≤ 128), so
-  fusing the producer rDFT into the k-loop incurs no re-reads. §Perf
-  quantifies the extra HBM-traffic saving over the paper's scheme.
-
-Accumulator layouts avoid all in-kernel transposes (see fused_fno1d.py).
+* ``fused_fno2d_call`` — paper-faithful partial fusion middle (§4.3,
+  Fig. 6): [truncated cDFT along X → CGEMM → padded icDFT along X] on the
+  complex stage-1 output (engine ``fused_fnond_core_call``).
+* ``fused_fno2d_full_call`` — beyond-paper full fusion: the entire layer
+  [rDFT_Y → cDFT_X → CGEMM → icDFT_X → irDFT_Y] in one kernel.
+* ``fused_fno2d_wgrad_call`` — fused rank-reduction weight gradient.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import _compiler_params
-
-_F32 = jnp.float32
+from repro.kernels import engine
 
 
-def _dot(a, b, dims):
-    return jax.lax.dot_general(a, b, (dims, ((), ())),
-                               preferred_element_type=_F32)
-
-
-# ---------------------------------------------------------------------------
-# Paper-faithful partial fusion: cDFT_X -> CGEMM -> icDFT_X
-# ---------------------------------------------------------------------------
-def _fused2d_kernel(zr_ref, zi_ref, wr_ref, wi_ref, fr_ref, fi_ref,
-                    gr_ref, gi_ref, yr_ref, yi_ref, accr, acci):
-    """Blocks: z[bb,bh,X,KY], w[bo,bh], f[X,KX], g[KX,X],
-    y[bb,KY,bo,X], acc[bb,KY,KX,bo]."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        accr[...] = jnp.zeros_like(accr)
-        acci[...] = jnp.zeros_like(acci)
-
-    zr, zi = zr_ref[...], zi_ref[...]
-    fr, fi = fr_ref[...], fi_ref[...]
-    # Truncated complex DFT along X: contract dim 2 -> [bb,bh,KY,KX].
-    ar = _dot(zr, fr, ((2,), (0,))) - _dot(zi, fi, ((2,), (0,)))
-    ai = _dot(zr, fi, ((2,), (0,))) + _dot(zi, fr, ((2,), (0,)))
-    # CGEMM over hidden: contract bh -> acc[bb,KY,KX,bo].
-    wr, wi = wr_ref[...], wi_ref[...]
-    accr[...] += _dot(ar, wr, ((1,), (1,))) - _dot(ai, wi, ((1,), (1,)))
-    acci[...] += _dot(ar, wi, ((1,), (1,))) + _dot(ai, wr, ((1,), (1,)))
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        # Padded icDFT along X: contract KX -> [bb,KY,bo,X].
-        gr, gi = gr_ref[...], gi_ref[...]
-        cr, ci = accr[...], acci[...]
-        yr_ref[...] = (_dot(cr, gr, ((2,), (0,)))
-                       - _dot(ci, gi, ((2,), (0,)))).astype(yr_ref.dtype)
-        yi_ref[...] = (_dot(cr, gi, ((2,), (0,)))
-                       + _dot(ci, gr, ((2,), (0,)))).astype(yi_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
 def fused_fno2d_call(zr: jax.Array, zi: jax.Array, wr: jax.Array,
                      wi: jax.Array, fr: jax.Array, fi: jax.Array,
                      gr: jax.Array, gi: jax.Array, bb: int, bo: int, bh: int,
                      interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
-    """z: [B,H,X,KY] complex pair (stage-1 output); w: [O,H]; f: [X,KX];
-    g: [KX,X]. Returns y pair [B,KY,O,X] (caller transposes)."""
-    b, h, x, ky = zr.shape
-    o = wr.shape[0]
-    kx = fr.shape[1]
-    grid = (b // bb, o // bo, h // bh)
-
-    z_spec = pl.BlockSpec((bb, bh, x, ky), lambda i, j, kk: (i, kk, 0, 0))
-    w_spec = pl.BlockSpec((bo, bh), lambda i, j, kk: (j, kk))
-    f_spec = pl.BlockSpec((x, kx), lambda i, j, kk: (0, 0))
-    g_spec = pl.BlockSpec((kx, x), lambda i, j, kk: (0, 0))
-    y_spec = pl.BlockSpec((bb, ky, bo, x), lambda i, j, kk: (i, 0, j, 0))
-    out_sd = jax.ShapeDtypeStruct((b, ky, o, x), zr.dtype)
-
-    return pl.pallas_call(
-        _fused2d_kernel,
-        grid=grid,
-        in_specs=[z_spec, z_spec, w_spec, w_spec, f_spec, f_spec,
-                  g_spec, g_spec],
-        out_specs=[y_spec, y_spec],
-        out_shape=[out_sd, out_sd],
-        scratch_shapes=[pltpu.VMEM((bb, ky, kx, bo), _F32),
-                        pltpu.VMEM((bb, ky, kx, bo), _F32)],
-        compiler_params=_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(zr, zi, wr, wi, fr, fi, gr, gi)
+    """z: [B,H,X,KY] complex pair (stage-1 output); w: [O,H] or
+    [O,H,KX,KY]; f: [X,KX]; g: [KX,X]. Returns y pair — [B,KY,O,X] shared
+    or [KY,B,O,X] per-mode (caller transposes)."""
+    return engine.fused_fnond_core_call(zr, zi, wr, wi, fr, fi, gr, gi,
+                                        bb=bb, bo=bo, bh=bh,
+                                        interpret=interpret)
 
 
-# ---------------------------------------------------------------------------
-# Fused 2D weight-gradient kernel (backward pass).
-#
-# With A = the truncated 2D spectrum of x (forward stages 1-2, [B,H,KY,KX])
-# and Ĝ = the output cotangent pushed into the spectral domain through the
-# transposed inverse transforms (g @ Eᵀ along Y, then @ G_invᵀ along X,
-# [B,O,KY,KX]), the weight cotangent is
-#
-#   dW[o,h(,kx,ky)] = conj( Σ_b Ĝ[b,o,ky,kx]·A[b,h,ky,kx] )   (Σ_{ky,kx}
-#                                                              when shared)
-#
-# Both spectra are computed in VMEM and consumed by the rank-reduction with
-# no HBM round trip. Grid = (out, hidden, batch) with batch innermost.
-# ---------------------------------------------------------------------------
-def _wgrad2d_kernel(x_ref, g_ref, cr_ref, ci_ref, fr_ref, fi_ref, etr_ref,
-                    eti_ref, gtr_ref, gti_ref, dwr_ref, dwi_ref, accr, acci):
-    """Blocks: x[bb,bh,X,Y] g[bb,bo,X,Y] c,et[Y,KY] f,gt[X,KX];
-    dw[bo,bh] shared / dw[KY,KX,bo,bh] per-mode (acc matches dw)."""
-    per_mode = dwr_ref.ndim == 4
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        accr[...] = jnp.zeros_like(accr)
-        acci[...] = jnp.zeros_like(acci)
-
-    xv, gv = x_ref[...], g_ref[...]
-    # A: rDFT along Y then cDFT along X -> [bb,bh,KY,KX].
-    zr = _dot(xv, cr_ref[...], ((3,), (0,)))
-    zi = _dot(xv, ci_ref[...], ((3,), (0,)))
-    fr, fi = fr_ref[...], fi_ref[...]
-    ar = _dot(zr, fr, ((2,), (0,))) - _dot(zi, fi, ((2,), (0,)))
-    ai = _dot(zr, fi, ((2,), (0,))) + _dot(zi, fr, ((2,), (0,)))
-    # Ĝ: transposed-irDFT along Y then transposed-icDFT along X
-    # -> [bb,bo,KY,KX].
-    tr = _dot(gv, etr_ref[...], ((3,), (0,)))
-    ti = _dot(gv, eti_ref[...], ((3,), (0,)))
-    gtr, gti = gtr_ref[...], gti_ref[...]
-    hr = _dot(tr, gtr, ((2,), (0,))) - _dot(ti, gti, ((2,), (0,)))
-    hi = _dot(tr, gti, ((2,), (0,))) + _dot(ti, gtr, ((2,), (0,)))
-
-    if per_mode:
-        def rdot(p, q):  # contract b, batch (KY,KX) -> [KY,KX,bo,bh]
-            return jax.lax.dot_general(
-                p, q, (((0,), (0,)), ((2, 3), (2, 3))),
-                preferred_element_type=_F32)
-    else:
-        def rdot(p, q):  # contract (b,KY,KX) -> [bo,bh]
-            return jax.lax.dot_general(
-                p, q, (((0, 2, 3), (0, 2, 3)), ((), ())),
-                preferred_element_type=_F32)
-
-    accr[...] += rdot(hr, ar) - rdot(hi, ai)
-    acci[...] += rdot(hr, ai) + rdot(hi, ar)
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        dwr_ref[...] = accr[...].astype(dwr_ref.dtype)
-        dwi_ref[...] = (-acci[...]).astype(dwi_ref.dtype)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bb", "bo", "bh", "per_mode", "interpret"))
-def fused_fno2d_wgrad_call(x: jax.Array, g: jax.Array, cr: jax.Array,
-                           ci: jax.Array, fr: jax.Array, fi: jax.Array,
-                           etr: jax.Array, eti: jax.Array, gtr: jax.Array,
-                           gti: jax.Array, bb: int, bo: int, bh: int,
-                           per_mode: bool, interpret: bool = False
-                           ) -> Tuple[jax.Array, jax.Array]:
-    """x: [B,H,X,Y] primal; g: [B,O,X,Y] cotangent; c,et: [Y,KY];
-    f,gt: [X,KX]. Returns (dwr, dwi): [O,H] shared or [KY,KX,O,H] per-mode
-    (caller transposes back to [O,H,KX,KY])."""
-    b, h, nx, ny = x.shape
-    o = g.shape[1]
-    ky = cr.shape[1]
-    kx = fr.shape[1]
-    grid = (o // bo, h // bh, b // bb)
-
-    x_spec = pl.BlockSpec((bb, bh, nx, ny), lambda i, j, kb: (kb, j, 0, 0))
-    g_spec = pl.BlockSpec((bb, bo, nx, ny), lambda i, j, kb: (kb, i, 0, 0))
-    mat = lambda r, c_: pl.BlockSpec((r, c_), lambda i, j, kb: (0, 0))
-    if per_mode:
-        dw_spec = pl.BlockSpec((ky, kx, bo, bh),
-                               lambda i, j, kb: (0, 0, i, j))
-        dw_shape = (ky, kx, o, h)
-        acc_shape = (ky, kx, bo, bh)
-    else:
-        dw_spec = pl.BlockSpec((bo, bh), lambda i, j, kb: (i, j))
-        dw_shape = (o, h)
-        acc_shape = (bo, bh)
-    out_sd = jax.ShapeDtypeStruct(dw_shape, x.dtype)
-
-    return pl.pallas_call(
-        _wgrad2d_kernel,
-        grid=grid,
-        in_specs=[x_spec, g_spec, mat(ny, ky), mat(ny, ky), mat(nx, kx),
-                  mat(nx, kx), mat(ny, ky), mat(ny, ky), mat(nx, kx),
-                  mat(nx, kx)],
-        out_specs=[dw_spec, dw_spec],
-        out_shape=[out_sd, out_sd],
-        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
-                        pltpu.VMEM(acc_shape, _F32)],
-        compiler_params=_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(x, g, cr, ci, fr, fi, etr, eti, gtr, gti)
-
-
-# ---------------------------------------------------------------------------
-# Beyond-paper full fusion: rDFT_Y -> cDFT_X -> CGEMM -> icDFT_X -> irDFT_Y
-# ---------------------------------------------------------------------------
-def _fused2d_full_kernel(x_ref, wr_ref, wi_ref, cr_ref, ci_ref, fr_ref,
-                         fi_ref, gr_ref, gi_ref, er_ref, ei_ref, y_ref,
-                         accr, acci):
-    """Blocks: x[bb,bh,X,Y], w[bo,bh] (or [bo,bh,KX,KY]), c[Y,KY], f[X,KX],
-    g[KX,X], e[KY,Y], y[bb,bo,X,Y], acc[bb,KY,KX,bo] ([KY,KX,bb,bo] permode).
-    """
-    per_mode = wr_ref.ndim == 4
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        accr[...] = jnp.zeros_like(accr)
-        acci[...] = jnp.zeros_like(acci)
-
-    xv = x_ref[...]
-    # Stage 1: truncated rDFT along Y (real input) -> [bb,bh,X,KY].
-    zr = _dot(xv, cr_ref[...], ((3,), (0,)))
-    zi = _dot(xv, ci_ref[...], ((3,), (0,)))
-    # Stage 2: truncated cDFT along X -> [bb,bh,KY,KX].
-    fr, fi = fr_ref[...], fi_ref[...]
-    ar = _dot(zr, fr, ((2,), (0,))) - _dot(zi, fi, ((2,), (0,)))
-    ai = _dot(zr, fi, ((2,), (0,))) + _dot(zi, fr, ((2,), (0,)))
-    wr, wi = wr_ref[...], wi_ref[...]
-    if per_mode:
-        # batched over (KX,KY): [bb,bh,KY,KX]x[bo,bh,KX,KY] -> [KY,KX,bb,bo]
-        def bdot(a, w):
-            return jax.lax.dot_general(
-                a, w, (((1,), (1,)), ((2, 3), (3, 2))),
-                preferred_element_type=_F32)
-    else:
-        def bdot(a, w):  # contract bh -> [bb,KY,KX,bo]
-            return _dot(a, w, ((1,), (1,)))
-    accr[...] += bdot(ar, wr) - bdot(ai, wi)
-    acci[...] += bdot(ar, wi) + bdot(ai, wr)
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        gr, gi = gr_ref[...], gi_ref[...]
-        cr_, ci_ = accr[...], acci[...]
-        kx_axis = 1 if per_mode else 2
-        # Padded icDFT along X: -> [bb,KY,bo,X] (or [KY,bb,bo,X] permode).
-        tr = (_dot(cr_, gr, ((kx_axis,), (0,)))
-              - _dot(ci_, gi, ((kx_axis,), (0,))))
-        ti = (_dot(cr_, gi, ((kx_axis,), (0,)))
-              + _dot(ci_, gr, ((kx_axis,), (0,))))
-        # Padded irDFT along Y (real output): contract KY -> [bb,bo,X,Y].
-        ky_axis = 0 if per_mode else 1
-        y = (_dot(tr, er_ref[...], ((ky_axis,), (0,)))
-             - _dot(ti, ei_ref[...], ((ky_axis,), (0,))))
-        if per_mode:  # [bb,bo,X,Y] already (KY was dim0, bb dim1 -> dims ok)
-            pass
-        y_ref[...] = y.astype(y_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
 def fused_fno2d_full_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
                           cr: jax.Array, ci: jax.Array, fr: jax.Array,
                           fi: jax.Array, gr: jax.Array, gi: jax.Array,
@@ -277,34 +42,21 @@ def fused_fno2d_full_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     x: [B,H,X,Y] real; w: [O,H] or [O,H,KX,KY]; c: [Y,KY]; f: [X,KX];
     g: [KX,X]; e: [KY,Y]. Returns y [B,O,X,Y] real.
     """
-    b, h, nx, ny = x.shape
-    o = wr.shape[0]
-    ky = cr.shape[1]
-    kx = fr.shape[1]
-    per_mode = wr.ndim == 4
-    grid = (b // bb, o // bo, h // bh)
+    return engine.fused_fnond_call(x, wr, wi, cr, ci, fr, fi, gr, gi,
+                                   er, ei, bb=bb, bo=bo, bh=bh,
+                                   interpret=interpret)
 
-    x_spec = pl.BlockSpec((bb, bh, nx, ny), lambda i, j, kk: (i, kk, 0, 0))
-    if per_mode:
-        w_spec = pl.BlockSpec((bo, bh, kx, ky), lambda i, j, kk: (j, kk, 0, 0))
-        acc_shape = (ky, kx, bb, bo)
-    else:
-        w_spec = pl.BlockSpec((bo, bh), lambda i, j, kk: (j, kk))
-        acc_shape = (bb, ky, kx, bo)
-    mat = lambda r, c_: pl.BlockSpec((r, c_), lambda i, j, kk: (0, 0))
-    y_spec = pl.BlockSpec((bb, bo, nx, ny), lambda i, j, kk: (i, j, 0, 0))
 
-    return pl.pallas_call(
-        _fused2d_full_kernel,
-        grid=grid,
-        in_specs=[x_spec, w_spec, w_spec, mat(ny, ky), mat(ny, ky),
-                  mat(nx, kx), mat(nx, kx), mat(kx, nx), mat(kx, nx),
-                  mat(ky, ny), mat(ky, ny)],
-        out_specs=y_spec,
-        out_shape=jax.ShapeDtypeStruct((b, o, nx, ny), x.dtype),
-        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
-                        pltpu.VMEM(acc_shape, _F32)],
-        compiler_params=_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(x, wr, wi, cr, ci, fr, fi, gr, gi, er, ei)
+def fused_fno2d_wgrad_call(x: jax.Array, g: jax.Array, cr: jax.Array,
+                           ci: jax.Array, fr: jax.Array, fi: jax.Array,
+                           etr: jax.Array, eti: jax.Array, gtr: jax.Array,
+                           gti: jax.Array, bb: int, bo: int, bh: int,
+                           per_mode: bool, interpret: bool = False
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,H,X,Y] primal; g: [B,O,X,Y] cotangent; c,et: [Y,KY];
+    f,gt: [X,KX]. Returns (dwr, dwi): [O,H] shared or [KY,KX,O,H] per-mode
+    (caller transposes back to [O,H,KX,KY])."""
+    return engine.fused_fnond_wgrad_call(x, g, cr, ci, fr, fi, etr, eti,
+                                         gtr, gti, bb=bb, bo=bo, bh=bh,
+                                         per_mode=per_mode,
+                                         interpret=interpret)

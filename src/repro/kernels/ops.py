@@ -23,8 +23,7 @@ import numpy as np
 from repro.core import spectral
 from repro.kernels import cgemm as cgemm_k
 from repro.kernels import dft as dft_k
-from repro.kernels import fused_fno1d as f1d
-from repro.kernels import fused_fno2d as f2d
+from repro.kernels import engine
 from repro.kernels import ref as ref_k
 
 
@@ -65,7 +64,43 @@ def _blocks(x, o, bb, bo, bh):
 
 # ---------------------------------------------------------------------------
 # Standalone truncated-DFT kernels (paper §3.3 — FFT w/ built-in filtering)
+#
+# All four transforms share one shape recipe: flatten the leading dims to
+# rows, lane-align the modes axis to 128 (forward operands pad columns,
+# inverse operands pad rows — and the inverse *inputs* pad their modes
+# axis to match), row-block, invoke the dft.py kernel, un-pad. `_rowwise`
+# holds that recipe once; each wrapper only picks the operand factory,
+# kernel, and path dispatch.
 # ---------------------------------------------------------------------------
+def _rowwise(call, rows, mats, out_modes: int, block_rows: int,
+             interpret: Optional[bool], pad_in_to: int = 0):
+    """Run a row-blocked standalone DFT kernel.
+
+    rows: input arrays [..., K_in] sharing leading dims; mats: broadcast
+    DFT operands; out_modes: slice of the kernel's last dim to keep (0 =
+    keep all); pad_in_to: zero-pad the inputs' last axis first (inverse
+    transforms whose operands were row-padded).
+    """
+    lead = rows[0].shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    br = _pick_block(m, block_rows)
+    mp = _rup(m, br)
+    if pad_in_to:
+        rows = [_pad_axis(r, -1, pad_in_to) for r in rows]
+    rows2d = [_pad_axis(r.reshape(m, r.shape[-1]), 0, mp) for r in rows]
+    out = call(*rows2d, *mats, br, _interpret(interpret))
+    single = not isinstance(out, (tuple, list))
+    outs = (out,) if single else tuple(out)
+    outs = tuple(o[:m, :out_modes or o.shape[-1]].reshape(
+        *lead, out_modes or o.shape[-1]) for o in outs)
+    return outs[0] if single else outs
+
+
+def _dft_operands(mats, dtype, pad_axis: int, to: int):
+    return tuple(_pad_axis(jnp.asarray(a, dtype), pad_axis, to)
+                 for a in mats)
+
+
 def truncated_rdft(x: jax.Array, modes: int, *, path: str = "pallas",
                    block_rows: int = 256,
                    interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
@@ -74,18 +109,10 @@ def truncated_rdft(x: jax.Array, modes: int, *, path: str = "pallas",
         return ref_k.ref_truncated_rdft(x, modes)
     if path == "xla":
         return spectral.truncated_rdft(x, modes)
-    n = x.shape[-1]
-    lead = x.shape[:-1]
-    m = int(np.prod(lead)) if lead else 1
-    kp = _rup(modes, 128)
-    cr, ci = spectral.rdft_mats(n, modes)
-    cr = _pad_axis(jnp.asarray(cr, x.dtype), 1, kp)
-    ci = _pad_axis(jnp.asarray(ci, x.dtype), 1, kp)
-    br = _pick_block(m, block_rows)
-    x2 = _pad_axis(x.reshape(m, n), 0, _rup(m, br))
-    xr, xi = dft_k._rdft_call(x2, cr, ci, br, _interpret(interpret))
-    return (xr[:m, :modes].reshape(*lead, modes),
-            xi[:m, :modes].reshape(*lead, modes))
+    mats = _dft_operands(spectral.rdft_mats(x.shape[-1], modes), x.dtype,
+                         1, _rup(modes, 128))
+    return _rowwise(dft_k._rdft_call, [x], mats, modes, block_rows,
+                    interpret)
 
 
 def padded_irdft(xr: jax.Array, xi: jax.Array, n: int, *,
@@ -96,19 +123,42 @@ def padded_irdft(xr: jax.Array, xi: jax.Array, n: int, *,
         return ref_k.ref_padded_irdft(xr, xi, n)
     if path == "xla":
         return spectral.padded_irdft(xr, xi, n)
-    modes = xr.shape[-1]
-    lead = xr.shape[:-1]
-    m = int(np.prod(lead)) if lead else 1
-    er, ei = spectral.irdft_mats(n, modes)
-    kp = _rup(modes, 128)
-    er = _pad_axis(jnp.asarray(er, xr.dtype), 0, kp)
-    ei = _pad_axis(jnp.asarray(ei, xr.dtype), 0, kp)
-    br = _pick_block(m, block_rows)
-    mp = _rup(m, br)
-    xr2 = _pad_axis(_pad_axis(xr.reshape(m, modes), 1, kp), 0, mp)
-    xi2 = _pad_axis(_pad_axis(xi.reshape(m, modes), 1, kp), 0, mp)
-    y = dft_k._irdft_call(xr2, xi2, er, ei, br, _interpret(interpret))
-    return y[:m].reshape(*lead, n)
+    kp = _rup(xr.shape[-1], 128)
+    mats = _dft_operands(spectral.irdft_mats(n, xr.shape[-1]), xr.dtype,
+                         0, kp)
+    return _rowwise(dft_k._irdft_call, [xr, xi], mats, 0, block_rows,
+                    interpret, pad_in_to=kp)
+
+
+def truncated_cdft(xr: jax.Array, xi: jax.Array, modes: int, *,
+                   path: str = "pallas", block_rows: int = 256,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Complex DFT along the last axis keeping the first `modes` bins."""
+    if path == "ref":
+        return ref_k.ref_truncated_cdft(xr, xi, modes)
+    if path == "xla":
+        return spectral.truncated_cdft(xr, xi, modes)
+    mats = _dft_operands(spectral.cdft_mats(xr.shape[-1], modes), xr.dtype,
+                         1, _rup(modes, 128))
+    return _rowwise(dft_k._cdft_call, [xr, xi], mats, modes, block_rows,
+                    interpret)
+
+
+def padded_icdft(xr: jax.Array, xi: jax.Array, n: int, *,
+                 path: str = "pallas", block_rows: int = 256,
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Inverse complex DFT from first-`modes` bins zero-padded to n."""
+    if path == "ref":
+        return ref_k.ref_padded_icdft(xr, xi, n)
+    if path == "xla":
+        return spectral.padded_icdft(xr, xi, n)
+    kp = _rup(xr.shape[-1], 128)
+    mats = _dft_operands(spectral.cdft_mats(n, xr.shape[-1], True),
+                         xr.dtype, 0, kp)
+    return _rowwise(dft_k._cdft_call, [xr, xi], mats, 0, block_rows,
+                    interpret, pad_in_to=kp)
 
 
 # ---------------------------------------------------------------------------
@@ -133,92 +183,201 @@ def cgemm(ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
-# Fused FNO spectral layers (the paper's contribution)
+# Fused FNO spectral layers (the paper's contribution), rank-generic.
+#
+# One implementation serves every spatial rank: the engine
+# (kernels/engine.py) emits the fused forward, adjoint, and weight-gradient
+# pallas_calls for any R, and the helpers below only handle padding, block
+# selection, and operand caching. spectral_layer_1d/2d/3d are thin
+# rank-pinning wrappers.
 #
 # The pallas path is wrapped in jax.custom_vjp so training can stay on the
-# fused kernels end-to-end. The layer is y = Re(((x·C)∘W)·E) — real-linear
-# in both x and W — so:
+# fused kernels end-to-end. The layer is y = Re(((x·C…)∘W)·…E) — real-
+# linear in both x and W — so:
 #   * dx is the SAME fused DFT→CGEMM→iDFT pipeline run on the cotangent
-#     with transposed DFT operands (spectral.*_adjoint_mats) and the weight
-#     swapped over (out, hidden);
-#   * dW is the fused rank-reduction kernel (fused_fno*_wgrad_call):
+#     with transposed DFT operands (spectral.fused_operand_mats
+#     adjoint=True) and the weight swapped over (out, hidden);
+#   * dW is the fused rank-reduction kernel (engine.fused_fnond_wgrad_call):
 #     conj(Σ_b Ĝ·A) with both spectra computed in-kernel.
 # ---------------------------------------------------------------------------
-def _mats_1d(n: int, modes: int, kp: int, dtype, adjoint: bool = False):
-    if adjoint:
-        cr, ci = spectral.irdft_adjoint_mats(n, modes)  # [n, modes]
-        er, ei = spectral.rdft_adjoint_mats(n, modes)   # [modes, n]
-    else:
-        cr, ci = spectral.rdft_mats(n, modes)
-        er, ei = spectral.irdft_mats(n, modes)
-    pad_c = lambda a: _pad_axis(jnp.asarray(a, dtype), 1, kp)
-    pad_e = lambda a: _pad_axis(jnp.asarray(a, dtype), 0, kp)
-    return pad_c(cr), pad_c(ci), pad_e(er), pad_e(ei)
+def _modes_key(modes) -> Tuple[int, ...]:
+    return tuple(int(m) for m in modes)
 
 
-def _fno1d_fused(x, wr, wi, modes, bb, bo, bh, interpret,
+def _mode_pad(modes: Sequence[int]) -> int:
+    """Rank-1 keeps its modes axis lane-aligned (it is the minor dim of the
+    accumulator); higher ranks use whole-extent mode blocks unpadded."""
+    return _rup(modes[0], 128) if len(modes) == 1 else 0
+
+
+def _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret,
                  adjoint: bool = False):
-    """Pad to block multiples and invoke the fused 1D kernel.
+    """Pad to block multiples and invoke the rank-generic fused kernel.
 
     adjoint=True runs the input-cotangent pipeline: transposed DFT
     operands; the caller passes (out, hidden)-swapped weights.
     """
-    b, h, n = x.shape
+    r = len(modes)
+    b, h = x.shape[:2]
     o = wr.shape[0]
-    per_mode = wr.ndim == 3
-    kp = _rup(modes, 128)
+    per_mode = wr.ndim == 2 + r
+    kp = _mode_pad(modes)
     bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
-    cr, ci, er, ei = _mats_1d(n, modes, kp, x.dtype, adjoint)
+    mats = spectral.fused_operand_mats(
+        tuple(x.shape[2:]), _modes_key(modes), jnp.dtype(x.dtype).name,
+        adjoint, kp)
     xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
-    wpad = lambda w: _pad_axis(_pad_axis(
-        (_pad_axis(w, 2, kp) if per_mode else w), 0, op_), 1, hp)
-    y = f1d.fused_fno1d_call(xpad, wpad(wr), wpad(wi), cr, ci, er, ei,
-                             bb=bb, bo=bo, bh=bh, interpret=interpret)
+
+    def wpad(w):
+        if per_mode and kp:
+            w = _pad_axis(w, 2, kp)
+        return _pad_axis(_pad_axis(w, 0, op_), 1, hp)
+
+    y = engine.fused_fnond_call(xpad, wpad(wr), wpad(wi), *mats,
+                                bb=bb, bo=bo, bh=bh, interpret=interpret)
     return y[:b, :o]
 
 
-def _fno1d_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode):
-    """Fused weight cotangent: [B,H,K]ᴴ·[B,O,K] rank reduction."""
-    b, h, n = x.shape
-    o = gy.shape[1]
-    kp = _rup(modes, 128)
+def _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret):
+    """Paper-faithful partial fusion for rank R ≥ 2: the outer R-1 forward
+    and inverse transforms run as standalone kernels (dft.py); only
+    [cDFT_s1 → CGEMM → icDFT_s1] — the stages adjacent to the GEMM — are
+    fused, matching TurboFNO §4.3. Rank 1 has no outer stages (partial ==
+    full)."""
+    r = len(modes)
+    if r == 1:
+        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+    b, h = x.shape[:2]
+    spatial = x.shape[2:]
+    o = wr.shape[0]
+    per_mode = wr.ndim == 2 + r
     bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
-    dtype = x.dtype
-    cr, ci = spectral.rdft_mats(n, modes)
-    etr, eti = spectral.irdft_adjoint_mats(n, modes)
-    pad_c = lambda a: _pad_axis(jnp.asarray(a, dtype), 1, kp)
+    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+
+    # Outer forward stages: rDFT along s_R, then cDFT along s_{R-1}…s_2.
+    zr, zi = truncated_rdft(xpad, modes[-1], path="pallas",
+                            interpret=interpret)
+    for j in range(1, r - 1):
+        zr = jnp.moveaxis(zr, -(j + 1), -1)
+        zi = jnp.moveaxis(zi, -(j + 1), -1)
+        zr, zi = truncated_cdft(zr, zi, modes[r - 1 - j], path="pallas",
+                                interpret=interpret)
+
+    # Fused middle on [B,H,s_1,K_R..K_2].
+    mats = spectral.fused_operand_mats(
+        tuple(spatial), _modes_key(modes), jnp.dtype(x.dtype).name)
+    fr, fi = mats[2 * r - 2], mats[2 * r - 1]  # forward cDFT along s_1
+    gr, gi = mats[2 * r], mats[2 * r + 1]      # inverse cDFT along s_1
+    wp = lambda w: _pad_axis(_pad_axis(w, 0, op_), 1, hp)
+    yr, yi = engine.fused_fnond_core_call(
+        zr, zi, wp(wr), wp(wi), fr, fi, gr, gi,
+        bb=bb, bo=bo, bh=bh, interpret=interpret)
+
+    # Restore [B,O,s_1,K_R..K_2] layout and slice the channel padding.
+    s = r - 1
+    if per_mode:  # kernel emits [K_R..K_2, B, O, s_1]
+        perm = (s, s + 1, s + 2) + tuple(range(s))
+    else:  # kernel emits [B, K_R..K_2, O, s_1]
+        perm = (0, s + 1, s + 2) + tuple(range(1, s + 1))
+    tr = jnp.transpose(yr, perm)[:b, :o]
+    ti = jnp.transpose(yi, perm)[:b, :o]
+
+    # Outer inverse stages: icDFT along s_2…s_{R-1}, then final irDFT.
+    for j in range(r - 2):
+        tr, ti = padded_icdft(tr, ti, spatial[j + 1], path="pallas",
+                              interpret=interpret)
+        tr = jnp.moveaxis(tr, -1, 3 + j)
+        ti = jnp.moveaxis(ti, -1, 3 + j)
+    return padded_irdft(tr, ti, spatial[-1], path="pallas",
+                        interpret=interpret)
+
+
+def _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode):
+    """Fused weight cotangent: conj(Σ_b Ĝ·A) rank reduction."""
+    r = len(modes)
+    b, h = x.shape[:2]
+    o = gy.shape[1]
+    kp = _mode_pad(modes)
+    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
+    mats = spectral.wgrad_operand_mats(
+        tuple(x.shape[2:]), _modes_key(modes), jnp.dtype(x.dtype).name, kp)
     xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
     gpad = _pad_axis(_pad_axis(gy, 0, bp), 1, op_)
-    dwr, dwi = f1d.fused_fno1d_wgrad_call(
-        xpad, gpad, pad_c(cr), pad_c(ci), pad_c(etr), pad_c(eti),
-        bb=bb, bo=bo, bh=bh, per_mode=per_mode, interpret=interpret)
-    if per_mode:  # kernel emits [K,O,H]
-        return (jnp.transpose(dwr, (1, 2, 0))[:o, :h, :modes],
-                jnp.transpose(dwi, (1, 2, 0))[:o, :h, :modes])
+    dwr, dwi = engine.fused_fnond_wgrad_call(
+        xpad, gpad, *mats, bb=bb, bo=bo, bh=bh, per_mode=per_mode,
+        interpret=interpret)
+    if per_mode:  # kernel emits [K_R..K_1,O,H] -> [O,H,K_1..K_R]
+        perm = (r, r + 1) + tuple(range(r - 1, -1, -1))
+        sl = (slice(o), slice(h)) + tuple(slice(m) for m in modes)
+        return jnp.transpose(dwr, perm)[sl], jnp.transpose(dwi, perm)[sl]
     return dwr[:o, :h], dwi[:o, :h]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _spectral_layer_1d_pallas(x, wr, wi, modes, bb, bo, bh, interpret):
-    return _fno1d_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+def _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret):
+    if variant == "full":
+        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+    return _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret)
 
 
-def _fno1d_vjp_fwd(x, wr, wi, modes, bb, bo, bh, interpret):
-    y = _fno1d_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _spectral_layer_nd_pallas(x, wr, wi, modes, variant, bb, bo, bh,
+                              interpret):
+    return _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh,
+                              interpret)
+
+
+def _fnond_vjp_fwd(x, wr, wi, modes, variant, bb, bo, bh, interpret):
+    y = _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret)
     return y, (x, wr, wi)
 
 
-def _fno1d_vjp_bwd(modes, bb, bo, bh, interpret, res, gy):
+def _fnond_vjp_bwd(modes, variant, bb, bo, bh, interpret, res, gy):
+    # partial and full compute the same linear map, so one adjoint (the
+    # fully fused one) serves both variants.
     x, wr, wi = res
     gy = gy.astype(x.dtype)
-    dx = _fno1d_fused(gy, jnp.swapaxes(wr, 0, 1), jnp.swapaxes(wi, 0, 1),
+    dx = _fnond_fused(gy, jnp.swapaxes(wr, 0, 1), jnp.swapaxes(wi, 0, 1),
                       modes, bb, bo, bh, interpret, adjoint=True)
-    dwr, dwi = _fno1d_wgrad(x, gy, modes, bb, bo, bh, interpret,
-                            per_mode=wr.ndim == 3)
+    dwr, dwi = _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret,
+                            per_mode=wr.ndim == 2 + len(modes))
     return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype))
 
 
-_spectral_layer_1d_pallas.defvjp(_fno1d_vjp_fwd, _fno1d_vjp_bwd)
+_spectral_layer_nd_pallas.defvjp(_fnond_vjp_fwd, _fnond_vjp_bwd)
+
+
+def _fnond_xla(x, wr, wi, modes):
+    """Staged matmul formulation of the rank-R layer, fused by XLA."""
+    r = len(modes)
+    spatial = x.shape[2:]
+    per_mode = wr.ndim == 2 + r
+    zr, zi = spectral.truncated_rdft(x, modes[-1])
+    for j in range(1, r):  # cDFT along s_{R-1}…s_1 -> [B,H,K_R..K_1]
+        zr = jnp.moveaxis(zr, -(j + 1), -1)
+        zi = jnp.moveaxis(zi, -(j + 1), -1)
+        zr, zi = spectral.truncated_cdft(zr, zi, modes[r - 1 - j])
+    fwd = "uvw"[:r]           # K_1..K_R (the weight layout order)
+    rev = fwd[::-1]           # K_R..K_1 (the spectrum layout order)
+    eq = (f"oh{fwd},bh{rev}->bo{rev}" if per_mode
+          else f"oh,bh{rev}->bo{rev}")
+    yr = jnp.einsum(eq, wr, zr) - jnp.einsum(eq, wi, zi)
+    yi = jnp.einsum(eq, wr, zi) + jnp.einsum(eq, wi, zr)
+    for j in range(r - 1):  # icDFT along s_1…s_{R-1}
+        yr, yi = spectral.padded_icdft(yr, yi, spatial[j])
+        yr = jnp.moveaxis(yr, -1, 2 + j)
+        yi = jnp.moveaxis(yi, -1, 2 + j)
+    return spectral.padded_irdft(yr, yi, spatial[-1])
+
+
+def _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
+                       interpret):
+    modes = _modes_key(modes)
+    if path == "ref":
+        return ref_k.ref_fnond(x, wr, wi, modes)
+    if path == "xla":
+        return _fnond_xla(x, wr, wi, modes)
+    return _spectral_layer_nd_pallas(x, wr, wi, modes, variant, bb, bo, bh,
+                                     _interpret(interpret))
 
 
 def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
@@ -230,123 +389,8 @@ def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
     path="pallas" is differentiable: jax.grad routes through the fused
     backward kernels (custom_vjp), never falling back to XLA.
     """
-    if path == "ref":
-        return ref_k.ref_fno1d(x, wr, wi, modes)
-    n = x.shape[-1]
-    if path == "xla":
-        xr, xi = spectral.truncated_rdft(x, modes)
-        eq = "oh,bhm->bom" if wr.ndim == 2 else "ohm,bhm->bom"
-        yr = jnp.einsum(eq, wr, xr) - jnp.einsum(eq, wi, xi)
-        yi = jnp.einsum(eq, wr, xi) + jnp.einsum(eq, wi, xr)
-        return spectral.padded_irdft(yr, yi, n)
-    return _spectral_layer_1d_pallas(x, wr, wi, modes, bb, bo, bh,
-                                     _interpret(interpret))
-
-
-def _mats_2d(nx: int, ny: int, kx: int, ky: int, dtype,
-             adjoint: bool = False):
-    if adjoint:
-        cr, ci = spectral.irdft_adjoint_mats(ny, ky)        # Eᵀ [ny,ky]
-        fr, fi = spectral.cdft_adjoint_mats(nx, kx, True)   # G⁻ᵀ [nx,kx]
-        gr, gi = spectral.cdft_adjoint_mats(nx, kx, False)  # Fᵀ [kx,nx]
-        er, ei = spectral.rdft_adjoint_mats(ny, ky)         # Cᵀ [ky,ny]
-    else:
-        cr, ci = spectral.rdft_mats(ny, ky)  # stage-1: rDFT along Y
-        fr, fi = spectral.cdft_mats(nx, kx, False)  # stage-2: cDFT along X
-        gr, gi = spectral.cdft_mats(nx, kx, True)  # inverse cDFT along X
-        er, ei = spectral.irdft_mats(ny, ky)  # inverse rDFT along Y
-    j = lambda a: jnp.asarray(a, dtype)
-    return (j(cr), j(ci), j(fr), j(fi), j(gr), j(gi), j(er), j(ei))
-
-
-def _fno2d_full_fused(x, wr, wi, modes, bb, bo, bh, interpret,
-                      adjoint: bool = False):
-    """Pad and invoke the fully fused 2D kernel (forward or, with
-    adjoint=True and swapped weights, the input-cotangent pipeline)."""
-    kx, ky = modes
-    nx, ny = x.shape[-2:]
-    b, h = x.shape[:2]
-    o = wr.shape[0]
-    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
-    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
-    mats = _mats_2d(nx, ny, kx, ky, x.dtype, adjoint)
-    wpad = lambda w: _pad_axis(_pad_axis(w, 0, op_), 1, hp)
-    y = f2d.fused_fno2d_full_call(xpad, wpad(wr), wpad(wi), *mats,
-                                  bb=bb, bo=bo, bh=bh, interpret=interpret)
-    return y[:b, :o]
-
-
-def _fno2d_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode):
-    """Fused 2D weight cotangent: conj(Σ_b Ĝ·A) rank reduction."""
-    kx, ky = modes
-    b, h, nx, ny = x.shape
-    o = gy.shape[1]
-    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
-    dtype = x.dtype
-    j = lambda a: jnp.asarray(a, dtype)
-    cr, ci = spectral.rdft_mats(ny, ky)
-    fr, fi = spectral.cdft_mats(nx, kx, False)
-    etr, eti = spectral.irdft_adjoint_mats(ny, ky)
-    gtr, gti = spectral.cdft_adjoint_mats(nx, kx, True)
-    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
-    gpad = _pad_axis(_pad_axis(gy, 0, bp), 1, op_)
-    dwr, dwi = f2d.fused_fno2d_wgrad_call(
-        xpad, gpad, j(cr), j(ci), j(fr), j(fi), j(etr), j(eti), j(gtr),
-        j(gti), bb=bb, bo=bo, bh=bh, per_mode=per_mode, interpret=interpret)
-    if per_mode:  # kernel emits [KY,KX,O,H] -> [O,H,KX,KY]
-        return (jnp.transpose(dwr, (2, 3, 1, 0))[:o, :h],
-                jnp.transpose(dwi, (2, 3, 1, 0))[:o, :h])
-    return dwr[:o, :h], dwi[:o, :h]
-
-
-def _fno2d_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret):
-    if variant == "full":
-        return _fno2d_full_fused(x, wr, wi, modes, bb, bo, bh, interpret)
-    # paper-faithful partial fusion: stage-1 truncated rDFT as separate
-    # kernel, then [cDFT_X → CGEMM → icDFT_X] fused, then separate irDFT.
-    kx, ky = modes
-    nx, ny = x.shape[-2:]
-    b, h = x.shape[:2]
-    o = wr.shape[0]
-    bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
-    xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
-    _, _, fr, fi, gr, gi, _, _ = _mats_2d(nx, ny, kx, ky, x.dtype)
-    wpad = lambda w: _pad_axis(_pad_axis(w, 0, op_), 1, hp)
-    zr, zi = truncated_rdft(xpad, ky, path="pallas", interpret=interpret)
-    yr, yi = f2d.fused_fno2d_call(zr, zi, wpad(wr), wpad(wi), fr, fi, gr, gi,
-                                  bb=bb, bo=bo, bh=bh, interpret=interpret)
-    # y pair [B,KY,O,X] -> [B,O,X,KY], then final padded irDFT along Y.
-    yr = jnp.transpose(yr[:b, :, :o], (0, 2, 3, 1))
-    yi = jnp.transpose(yi[:b, :, :o], (0, 2, 3, 1))
-    return padded_irdft(yr, yi, ny, path="pallas", interpret=interpret)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _spectral_layer_2d_pallas(x, wr, wi, modes, variant, bb, bo, bh,
-                              interpret):
-    return _fno2d_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh,
+    return _spectral_layer_nd(x, wr, wi, (modes,), path, "full", bb, bo, bh,
                               interpret)
-
-
-def _fno2d_vjp_fwd(x, wr, wi, modes, variant, bb, bo, bh, interpret):
-    y = _fno2d_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret)
-    return y, (x, wr, wi)
-
-
-def _fno2d_vjp_bwd(modes, variant, bb, bo, bh, interpret, res, gy):
-    # partial and full compute the same linear map, so one adjoint (the
-    # fully fused one) serves both variants.
-    x, wr, wi = res
-    gy = gy.astype(x.dtype)
-    dx = _fno2d_full_fused(gy, jnp.swapaxes(wr, 0, 1),
-                           jnp.swapaxes(wi, 0, 1), modes, bb, bo, bh,
-                           interpret, adjoint=True)
-    dwr, dwi = _fno2d_wgrad(x, gy, modes, bb, bo, bh, interpret,
-                            per_mode=wr.ndim == 4)
-    return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype))
-
-
-_spectral_layer_2d_pallas.defvjp(_fno2d_vjp_fwd, _fno2d_vjp_bwd)
 
 
 def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
@@ -361,26 +405,22 @@ def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
     (beyond-paper, DESIGN.md §3.4). path="pallas" is differentiable via
     custom_vjp (fused backward for both variants).
     """
-    kx, ky = modes
-    if path == "ref":
-        return ref_k.ref_fno2d(x, wr, wi, modes)
-    nx, ny = x.shape[-2:]
-    per_mode = wr.ndim == 4
-    if path == "xla":
-        zr, zi = spectral.truncated_rdft(x, ky)  # [B,H,X,ky]
-        zr, zi = jnp.swapaxes(zr, -1, -2), jnp.swapaxes(zi, -1, -2)
-        ar, ai = spectral.truncated_cdft(zr, zi, kx)  # [B,H,ky,kx]
-        eq = "oh,bhyx->boyx" if not per_mode else "ohxy,bhyx->boyx"
-        yr = jnp.einsum(eq, wr, ar) - jnp.einsum(eq, wi, ai)
-        yi = jnp.einsum(eq, wr, ai) + jnp.einsum(eq, wi, ar)
-        tr, ti = spectral.padded_icdft(yr, yi, nx)  # [B,O,ky,X]
-        tr, ti = jnp.swapaxes(tr, -1, -2), jnp.swapaxes(ti, -1, -2)
-        yr2 = spectral.padded_irdft(tr, ti, ny)  # real [B,O,X,Y]
-        return yr2
+    return _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
+                              interpret)
 
-    if variant != "full" and per_mode:
-        raise NotImplementedError(
-            "paper-faithful partial fusion implements the paper's shared-"
-            "weight CGEMM; use variant='full' or path='xla' for per_mode")
-    return _spectral_layer_2d_pallas(x, wr, wi, modes, variant, bb, bo, bh,
-                                     _interpret(interpret))
+
+def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                      modes: Tuple[int, int, int], *, path: str = "pallas",
+                      variant: str = "full", bb: int = 1, bo: int = 128,
+                      bh: int = 16,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Full 3D FNO spectral layer (Navier–Stokes-class workloads).
+
+    x: [B,H,X,Y,Z]; w: [O,H] or [O,H,kx,ky,kz]. Same engine, rank pinned
+    to 3: variant "full" fuses the whole layer in one kernel; "partial"
+    (paper-faithful) fuses only the GEMM-adjacent cDFT/icDFT pair and runs
+    the outer transforms as standalone kernels. path="pallas" is
+    differentiable via custom_vjp (fused backward for both variants).
+    """
+    return _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
+                              interpret)

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -48,41 +49,53 @@ def ref_cgemm(ar, ai, br, bi) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 # -- fused-layer oracles -----------------------------------------------------
+def ref_fnond(x: jnp.ndarray, wr: jnp.ndarray, wi: jnp.ndarray,
+              modes: Tuple[int, ...]) -> jnp.ndarray:
+    """Staged rank-R FNO spectral layer, TurboFNO truncation convention.
+
+    x: [B, H, s_1..s_R]; keeps the LOW corner ``[:k_1, …, :k_R]`` only
+    (paper Fig. 4 — "first dimX/DimX fraction"), unlike classic FNO's ±
+    corners. W: [O, H] or [O, H, k_1..k_R]. Output [B, O, s_1..s_R].
+
+    rFFT along s_R, FFT along the rest → truncate → CGEMM over hidden →
+    zero-pad → inverse transforms. Built on jnp.fft (NOT the matmul
+    formulation) so it stays a genuinely independent oracle for the engine.
+    """
+    r = len(modes)
+    spatial = x.shape[2:]
+    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=-1)[..., :modes[-1]]
+    for j in range(r - 1):  # FFT along s_{R-1}, …, s_1 (axes in place)
+        ax = -2 - j
+        xf = jnp.fft.fft(xf, axis=ax)
+        xf = jax.lax.slice_in_dim(xf, 0, modes[r - 2 - j],
+                                  axis=xf.ndim + ax)
+    w = (wr + 1j * wi).astype(jnp.complex64)
+    ms = "uvw"[:r]
+    eq = (f"oh{ms},bh{ms}->bo{ms}" if w.ndim > 2
+          else f"oh,bh{ms}->bo{ms}")
+    yf = jnp.einsum(eq, w, xf)
+    pad = [(0, 0), (0, 0)]
+    pad += [(0, n - k) for n, k in zip(spatial[:-1], modes[:-1])]
+    pad += [(0, spatial[-1] // 2 + 1 - modes[-1])]
+    yf = jnp.pad(yf, pad)
+    for j in range(r - 1):  # inverse FFT along s_1, …, s_{R-1}
+        yf = jnp.fft.ifft(yf, n=spatial[j], axis=2 + j)
+    return jnp.fft.irfft(yf, n=spatial[-1], axis=-1).astype(jnp.float32)
+
+
 def ref_fno1d(x: jnp.ndarray, wr: jnp.ndarray, wi: jnp.ndarray,
               modes: int) -> jnp.ndarray:
     """Staged FNO 1D spectral layer. x: [B, H, N]; W: [O, H] or [O, H, modes].
 
     rFFT → truncate → CGEMM over hidden → zero-pad → irFFT. Output [B, O, N].
     """
-    n = x.shape[-1]
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=-1)[..., :modes]
-    w = (wr + 1j * wi).astype(jnp.complex64)
-    if w.ndim == 2:  # shared across modes (paper's CGEMM)
-        yf = jnp.einsum("oh,bhm->bom", w, xf)
-    else:  # per-mode (classic FNO)
-        yf = jnp.einsum("ohm,bhm->bom", w, xf)
-    pad = [(0, 0), (0, 0), (0, n // 2 + 1 - modes)]
-    return jnp.fft.irfft(jnp.pad(yf, pad), n=n, axis=-1).astype(jnp.float32)
+    return ref_fnond(x, wr, wi, (modes,))
 
 
 def ref_fno2d(x: jnp.ndarray, wr: jnp.ndarray, wi: jnp.ndarray,
               modes: Tuple[int, int]) -> jnp.ndarray:
     """Staged FNO 2D spectral layer, TurboFNO truncation convention.
 
-    x: [B, H, X, Y]; keeps the LOW corner [:kx, :ky] only (paper Fig. 4 —
-    "first dimX/DimX fraction"), unlike classic FNO's ± corners.
-    W: [O, H] or [O, H, kx, ky]. Output [B, O, X, Y].
+    x: [B, H, X, Y]; W: [O, H] or [O, H, kx, ky]. Output [B, O, X, Y].
     """
-    kx, ky = modes
-    nx, ny = x.shape[-2:]
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=-1)[..., :ky]  # along Y
-    xf = jnp.fft.fft(xf, axis=-2)[..., :kx, :]  # along X
-    w = (wr + 1j * wi).astype(jnp.complex64)
-    if w.ndim == 2:
-        yf = jnp.einsum("oh,bhxy->boxy", w, xf)
-    else:
-        yf = jnp.einsum("ohxy,bhxy->boxy", w, xf)
-    pad = [(0, 0), (0, 0), (0, nx - kx), (0, ny // 2 + 1 - ky)]
-    yf = jnp.pad(yf, pad)
-    y = jnp.fft.ifft(yf, n=nx, axis=-2)
-    return jnp.fft.irfft(y, n=ny, axis=-1).astype(jnp.float32)
+    return ref_fnond(x, wr, wi, tuple(modes))

@@ -97,7 +97,8 @@ def main() -> int:
     if args.mesh in ("multi", "both"):
         meshes.append(("multi(2x16x16)", make_production_mesh(multi_pod=True)))
 
-    archs = [args.arch] if args.arch else list(ARCH_IDS) + ["fno1d", "fno2d"]
+    archs = [args.arch] if args.arch else list(ARCH_IDS) + ["fno1d", "fno2d",
+                                                            "fno3d"]
     shapes = [args.shape] if args.shape else list(SHAPES)
 
     records, failures = [], []

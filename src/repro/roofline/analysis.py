@@ -161,6 +161,12 @@ def fno_model_flops(cfg, batch: int) -> float:
     """Exact useful FLOPs of the truncated-DFT FNO layer algebra
     (DESIGN.md §3.3), per batch element, ×3 for fwd+bwd (train step).
 
+    Rank-generic (matches the engine's stage order): each forward DFT
+    stage transforms one spatial axis n_j→k_j over the pencils formed by
+    the other (partially transformed) axes — 4 real-matmul FLOP factors for
+    the real first stage, 8 for complex stages; CGEMM is 8·Πk·H·O; the
+    inverse chain mirrors the forward with O channels.
+
     1D (x [H,N], modes K):   rDFT 4·H·N·K | CGEMM 8·K·H·O | irDFT 4·O·N·K
     2D (x [H,X,Y], KX,KY):   rDFT_Y 4·H·X·Y·KY | cDFT_X 8·H·KY·X·KX |
                              CGEMM 8·KX·KY·H·O | icDFT_X 8·O·KY·KX·X |
@@ -170,14 +176,24 @@ def fno_model_flops(cfg, batch: int) -> float:
     h = o = cfg.hidden
     sp = math.prod(cfg.spatial)
     lift = cfg.lifting_dim or 2 * h
-    if cfg.ndim == 1:
-        (n,), (k,) = cfg.spatial, cfg.modes
-        spectral = 4 * h * n * k + 8 * k * h * o + 4 * o * n * k
-    else:
-        (nx, ny), (kx, ky) = cfg.spatial, cfg.modes
-        spectral = (4 * h * nx * ny * ky + 8 * h * ky * nx * kx
-                    + 8 * kx * ky * h * o + 8 * o * ky * kx * nx
-                    + 4 * o * nx * ky * ny)
+    r = cfg.ndim
+    spatial, modes = list(cfg.spatial), list(cfg.modes)
+    cur = list(spatial)
+
+    def stage(ch, ax, real):
+        pencils = math.prod(cur) // cur[ax]
+        return (4 if real else 8) * ch * pencils * spatial[ax] * modes[ax]
+
+    spectral = stage(h, r - 1, True)  # rDFT along s_R (real input)
+    cur[r - 1] = modes[r - 1]
+    for ax in range(r - 2, -1, -1):  # cDFT along s_{R-1}…s_1
+        spectral += stage(h, ax, False)
+        cur[ax] = modes[ax]
+    spectral += 8 * math.prod(modes) * h * o  # CGEMM over hidden
+    for ax in range(r - 1):  # icDFT along s_1…s_{R-1}
+        spectral += stage(o, ax, False)
+        cur[ax] = spatial[ax]
+    spectral += stage(o, r - 1, True)  # irDFT along s_R (real output)
     if cfg.weight_mode == "per_mode":
         pass  # CGEMM term identical per mode (already counted per-mode)
     per_layer = spectral + 2 * sp * h * o  # + bypass 1x1

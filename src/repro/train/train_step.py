@@ -48,7 +48,8 @@ def make_train_step(cfg, optimizer: AdamW, *, microbatches: int = 1,
     layers carry a custom_vjp whose backward is itself a fused Pallas
     pipeline (kernels/ops.py), so no staged-XLA fallback is involved.
     fno_variant picks full (beyond-paper) or partial (paper-faithful)
-    fusion for 2D pallas layers.
+    fusion for the rank ≥ 2 pallas layers (1D has a single stage, so the
+    variants coincide).
 
     grad_acc_dtype: dtype of the gradient-accumulation buffer (default
     f32). The 340B+ archs use bf16 so the FSDP-sharded buffer halves —

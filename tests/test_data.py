@@ -33,6 +33,30 @@ def test_darcy_residual_small():
     assert rel < 0.05, rel
 
 
+def test_diffusion3d_determinism_and_spectrum():
+    b1 = pde.diffusion3d_batch(0, 2, 2, 16)
+    b2 = pde.diffusion3d_batch(0, 2, 2, 16)
+    np.testing.assert_array_equal(np.asarray(b1["x"]), np.asarray(b2["x"]))
+    np.testing.assert_array_equal(np.asarray(b1["y"]), np.asarray(b2["y"]))
+    assert b1["x"].shape == (2, 1, 16, 16, 16)
+    assert bool(jnp.isfinite(b1["y"]).all())
+    # diffusion damps high frequencies: the high-|k| energy fraction of
+    # u(T) must be below that of u0. Mask on |k| magnitude (fftfreq), not
+    # array corners — the full-FFT axes carry mirrored low-|k| energy at
+    # the top indices.
+    def hi_frac(u):
+        a = np.asarray(u[:, 0])
+        n = a.shape[-1]
+        e = np.abs(np.fft.rfftn(a, axes=(-3, -2, -1))) ** 2
+        kf = np.fft.fftfreq(n, 1.0 / n)
+        kr = np.fft.rfftfreq(n, 1.0 / n)
+        k2 = (kf[:, None, None] ** 2 + kf[None, :, None] ** 2
+              + kr[None, None, :] ** 2)
+        hi = k2 > 4.0 ** 2
+        return e[:, hi].sum() / e.sum()
+    assert hi_frac(b1["y"]) < hi_frac(b1["x"])
+
+
 def test_token_batches_sharded_and_deterministic():
     full = tokens.token_batch(7, 5, batch=8, seq_len=16, vocab=100)
     s0 = tokens.token_batch(7, 5, batch=8, seq_len=16, vocab=100,

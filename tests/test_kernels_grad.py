@@ -1,8 +1,8 @@
 """Differentiability of the fused Pallas spectral layers.
 
 jax.grad through path="pallas" must match path="xla" (which XLA
-differentiates automatically) to 1e-4 in f32 — for dx, dwr, and dwi, in 1D
-and 2D, shared and per-mode weights, full and partial fusion. Plus a
+differentiates automatically) to 1e-4 in f32 — for dx, dwr, and dwi, in
+1D/2D/3D, shared and per-mode weights, full and partial fusion. Plus a
 train_step smoke test with fno_path="pallas" proving the trainer never
 falls back to XLA.
 
@@ -77,13 +77,38 @@ def test_grad_fused_fno2d_shared(b, h, o, x_, y_, kx, ky, variant):
 
 
 @pytest.mark.parametrize("b,h,o,x_,y_,kx,ky", CASES_2D[:1])
-def test_grad_fused_fno2d_permode(b, h, o, x_, y_, kx, ky):
+@pytest.mark.parametrize("variant", ["full", "partial"])
+def test_grad_fused_fno2d_permode(b, h, o, x_, y_, kx, ky, variant):
     rng = np.random.default_rng(7)
     x = _mk(rng, b, h, x_, y_)
     wr = _mk(rng, o, h, kx, ky, scale=1.0 / h)
     wi = _mk(rng, o, h, kx, ky, scale=1.0 / h)
     mk = lambda p: lambda x, wr, wi: ops.spectral_layer_2d(
-        x, wr, wi, (kx, ky), path=p, variant="full")
+        x, wr, wi, (kx, ky), path=p, variant=variant if p == "pallas"
+        else "full")
+    _assert_grads_match(mk, x, wr, wi)
+
+
+CASES_3D = [
+    # B, H, O, X, Y, Z, KX, KY, KZ
+    (1, 4, 4, 8, 8, 16, 3, 3, 5),
+]
+
+
+@pytest.mark.parametrize("b,h,o,x_,y_,z_,kx,ky,kz", CASES_3D)
+@pytest.mark.parametrize("weight_mode", ["shared", "per_mode"])
+@pytest.mark.parametrize("variant", ["full", "partial"])
+def test_grad_fused_fno3d(b, h, o, x_, y_, z_, kx, ky, kz, weight_mode,
+                          variant):
+    rng = np.random.default_rng(z_ + kz)
+    x = _mk(rng, b, h, x_, y_, z_)
+    wshape = ((o, h) if weight_mode == "shared"
+              else (o, h, kx, ky, kz))
+    wr = _mk(rng, *wshape, scale=1.0 / h)
+    wi = _mk(rng, *wshape, scale=1.0 / h)
+    mk = lambda p: lambda x, wr, wi: ops.spectral_layer_3d(
+        x, wr, wi, (kx, ky, kz), path=p, variant=variant if p == "pallas"
+        else "full")
     _assert_grads_match(mk, x, wr, wi)
 
 

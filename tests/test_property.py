@@ -85,6 +85,70 @@ def test_fusion_equals_staged(seed):
                                atol=2e-4)
 
 
+@given(n=dims, frac=st.floats(0.1, 0.9), seed=st.integers(0, 2 ** 16))
+def test_rdft_roundtrip_is_projection(n, frac, seed):
+    """Adjoint identity of the matrix factories: irDFT(rDFT(x)) equals the
+    spectral truncation of x (an orthogonal projection) — idempotent and
+    energy-contracting."""
+    k = max(1, int(frac * (n // 2 + 1)))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, n)), jnp.float32)
+    once = sp.padded_irdft(*sp.truncated_rdft(x, k), n)
+    ref = np.fft.irfft(np.pad(np.fft.rfft(np.asarray(x), axis=-1)[:, :k],
+                              ((0, 0), (0, n // 2 + 1 - k))), n=n, axis=-1)
+    np.testing.assert_allclose(np.asarray(once), ref, rtol=1e-3, atol=1e-4)
+    twice = sp.padded_irdft(*sp.truncated_rdft(once, k), n)
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once),
+                               rtol=1e-3, atol=1e-4)
+    assert float(jnp.sum(once ** 2)) <= float(jnp.sum(x ** 2)) * (1 + 1e-4)
+
+
+@given(n=dims, seed=st.integers(0, 2 ** 16))
+def test_real_input_spectrum_conjugate_symmetric(n, seed):
+    """Conjugate symmetry of the real-input path: the full complex DFT of
+    a real signal satisfies X[m] == conj(X[(N-m) mod N]) — the invariant
+    that lets the engine carry only n//2+1 rFFT bins."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, n)), jnp.float32)
+    xr, xi = sp.truncated_cdft(x, jnp.zeros_like(x), n)
+    idx = (-np.arange(n)) % n
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(xr)[:, idx],
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(xi), -np.asarray(xi)[:, idx],
+                               rtol=1e-3, atol=1e-3)
+
+
+_RANK_CASES = {
+    1: ((32,), (9,)),
+    2: ((16, 16), (5, 5)),
+    3: ((8, 8, 8), (3, 3, 3)),
+}
+_RANK_LAYERS = {1: lambda *a, **k: ops.spectral_layer_1d(*a, **k),
+                2: lambda *a, **k: ops.spectral_layer_2d(*a, **k),
+                3: lambda *a, **k: ops.spectral_layer_3d(*a, **k)}
+
+
+@given(rank=st.sampled_from([1, 2, 3]),
+       weight_mode=st.sampled_from(["shared", "per_mode"]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=12)
+def test_engine_matches_ref_all_ranks(rank, weight_mode, seed):
+    """One rank-generic engine == the jnp.fft staged oracle for every
+    spatial rank and weight layout (the dedup-refactor invariant)."""
+    spatial, modes = _RANK_CASES[rank]
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    h = o = 4
+    x = mk(2, h, *spatial)
+    wshape = (o, h) if weight_mode == "shared" else (o, h) + modes
+    wr, wi = mk(*wshape) / h, mk(*wshape) / h
+    m = modes[0] if rank == 1 else modes
+    y = _RANK_LAYERS[rank](x, wr, wi, m, path="pallas")
+    yref = ref_k.ref_fnond(x, wr, wi, modes)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), rtol=2e-4,
+                               atol=2e-4)
+
+
 @given(n=st.sampled_from([4, 8, 16, 32, 64, 128, 256, 512]),
        frac=st.floats(0.05, 1.0))
 def test_prune_counts_monotone(n, frac):
