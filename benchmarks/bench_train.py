@@ -10,7 +10,9 @@ Three tiers:
   * fwd:   forward-only spectral layer, every rank (1D/2D/3D) — the
     rank-sweep rows that track the 3D path in the perf trajectory JSON;
   * layer: value_and_grad through a single spectral layer, every rank;
-  * step:  a full FNO AdamW train step (reduced fno2d config).
+  * step:  a full FNO AdamW train step (reduced fno2d config), plus an
+    f32-vs-bf16 PrecisionPolicy row pair whose `derived` column reports
+    the modeled HBM bytes per step (roofline.fno_model_bytes).
 
 derived = fused-path speedup over the staged-XLA step. NOTE: off-TPU the
 pallas kernels run in interpret mode, so absolute numbers (and speedups
@@ -93,9 +95,11 @@ def run(quick: bool = False, ranks: Sequence[int] = (1, 2, 3)):
 
     # full train step on the reduced 2D config
     from repro.configs import get_config
+    from repro.configs.fno import with_precision
     from repro.core import fno as fno_mod
     from repro.optim import AdamW
     from repro.optim.schedule import constant
+    from repro.roofline.analysis import fno_model_bytes
     from repro.train.train_step import make_train_step
 
     cfg = get_config("fno2d", reduced=True)
@@ -111,6 +115,26 @@ def run(quick: bool = False, ranks: Sequence[int] = (1, 2, 3)):
         row(f"train_step_{path}_{cfg.name}", times[path], "")
     row(f"train_step_speedup_{cfg.name}", times["pallas"],
         f"speedup={times['xla'] / times['pallas']:.2f}x")
+
+    # dtype column: the same fused train step under the f32 vs bf16
+    # PrecisionPolicy. `derived` carries the modeled HBM bytes per step
+    # (roofline.fno_model_bytes) — the bf16 row shows the traffic
+    # reduction that compounds with the fusion win (TurboFNO's
+    # memory-bound argument); wall-clock off-TPU is interpret-mode
+    # harness validation only.
+    bts = {"f32": fno_model_bytes(cfg, batch["x"].shape[0])}
+    # the f32 policy is the default config — reuse the timing from above
+    row(f"train_step_pallas_{cfg.name}_f32", times["pallas"],
+        f"bytes/step={bts['f32'] / 2 ** 20:.2f}MiB")
+    bcfg = with_precision(cfg, "bf16")
+    bparams = fno_mod.init_fno(jax.random.PRNGKey(0), bcfg)
+    step = jax.jit(make_train_step(bcfg, opt, fno_path="pallas"))
+    t = time_fn(step, bparams, opt.init(bparams), batch, iters=3)
+    bts["bf16"] = fno_model_bytes(bcfg, batch["x"].shape[0])
+    row(f"train_step_pallas_{cfg.name}_bf16", t,
+        f"bytes/step={bts['bf16'] / 2 ** 20:.2f}MiB")
+    row(f"train_step_bytes_reduction_{cfg.name}", 0.0,
+        f"bf16/f32={bts['bf16'] / bts['f32']:.3f}x")
 
 
 if __name__ == "__main__":

@@ -4,13 +4,16 @@
 
 Builds a small FNO-2D, runs the same input through the three execution
 paths (staged jnp.fft reference, XLA truncated-DFT formulation, fused
-Pallas kernel) and shows they agree; then takes a few training steps on
-synthetic Darcy-flow data.
+Pallas kernel) and shows they agree — in f32 and under the bf16
+PrecisionPolicy (bf16 kernel I/O, f32 accumulators); then takes a few
+training steps on synthetic Darcy-flow data. For mixed-precision
+training pass ``--dtype bf16`` to examples/train_fno.py.
 """
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.configs.fno import with_precision
 from repro.core import fno
 from repro.data import pde
 from repro.optim import AdamW
@@ -31,6 +34,11 @@ outs = {p: fno.apply_fno(params, cfg, x, path=p)
 for name, y in outs.items():
     err = float(jnp.abs(y - outs["ref"]).max())
     print(f"  path={name:7s} out={y.shape}  max|Δ vs ref|={err:.2e}")
+
+y16 = fno.apply_fno(params, with_precision(cfg, "bf16"), x, path="pallas")
+err = float(jnp.abs(y16.astype(jnp.float32) - outs["ref"]).max())
+print(f"  path=pallas (bf16 policy) out dtype={y16.dtype}  "
+      f"max|Δ vs f32 ref|={err:.2e}")
 
 opt = AdamW(lr=constant(1e-2), weight_decay=0.0)
 step = jax.jit(make_train_step(cfg, opt, fno_path="xla"))

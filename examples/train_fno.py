@@ -14,6 +14,11 @@ accelerator — one step is ~0.9 TFLOP at batch 8):
 Rank sweep: --arch fno1d / fno2d / fno3d trains the matching PDE task
 (Burgers / Darcy / 3D diffusion-reaction) through the same rank-generic
 fused engine.
+
+Mixed precision: --dtype bf16 selects the bf16 PrecisionPolicy — bf16
+compute/spectral operands through the fused kernels (halving the
+memory-bound layer's HBM traffic) with f32 master params, accumulators,
+and AdamW update. --dtype f32 (default) is the pure-f32 policy.
 """
 import argparse
 import tempfile
@@ -21,6 +26,7 @@ import tempfile
 import jax
 
 from repro.configs import get_config
+from repro.configs.fno import with_precision
 from repro.core import fno
 from repro.data import pde
 from repro.optim import AdamW
@@ -47,20 +53,26 @@ def main():
     ap.add_argument("--variant", default="full", choices=["full", "partial"],
                     help="2D/3D pallas fusion: full (beyond-paper) or "
                          "partial (paper-faithful)")
+    ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"],
+                    help="precision policy: bf16 = bf16 compute/spectral "
+                         "operands with f32 master params + accumulators "
+                         "(mixed precision); f32 = pure f32")
     args = ap.parse_args()
 
     if args.full and args.arch not in (None, "fno2d-large"):
         ap.error("--full selects fno2d-large; it conflicts with "
                  f"--arch {args.arch}")
     arch = args.arch or ("fno2d-large" if args.full else "fno2d")
-    cfg = get_config(arch, reduced=not args.full)
+    cfg = with_precision(get_config(arch, reduced=not args.full), args.dtype)
     key = jax.random.PRNGKey(0)
     params = fno.init_fno(key, cfg)
     n = cfg.spatial[0]
     print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"grid {cfg.spatial}, modes {cfg.modes}, "
           f"weights={cfg.weight_mode}, path={args.path}, "
-          f"variant={args.variant}")
+          f"variant={args.variant}, dtype={args.dtype} "
+          f"(compute={cfg.precision.compute_dtype}, "
+          f"params={cfg.precision.param_dtype})")
 
     opt = AdamW(lr=cosine_warmup(args.lr, args.steps // 10 + 1, args.steps),
                 weight_decay=0.0)

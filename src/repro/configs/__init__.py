@@ -13,7 +13,7 @@ from repro.configs import (arctic_480b, chatglm3_6b, fno, gemma3_27b,
                            mamba2_370m, mixtral_8x7b, nemotron_4_340b,
                            qwen2_1_5b)
 from repro.configs.base import (SHAPES, SMOKE_SHAPES, FNOConfig, ModelConfig,
-                                ShapeSpec)
+                                PrecisionPolicy, ShapeSpec)
 
 _ARCH_MODULES = {
     "qwen2-1.5b": qwen2_1_5b,

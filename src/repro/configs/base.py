@@ -154,6 +154,64 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """One precision policy for the whole spectral stack.
+
+    Every boundary that used to assume ``jnp.float32`` consumes this object
+    instead — configs own the presets, ``core/fno.py`` applies the
+    param/compute casts, ``kernels/ops.py``/``kernels/engine.py`` honor the
+    spectral-operand and accumulator dtypes, and ``train/train_step.py``
+    takes the grad-accumulation dtype. Cast ownership (ROADMAP.md
+    §Precision policy):
+
+      * ``param_dtype``    — master-parameter storage (init + AdamW update).
+      * ``compute_dtype``  — activation / kernel I/O dtype; ``apply_fno``
+        casts once at the top, the fused layers cast their operands inside
+        the custom_vjp so cotangents leave at the *primal* dtypes.
+      * ``spectral_dtype`` — the DFT operand matrices (the bundles cached
+        in ``core/spectral.py``, keyed on this dtype).
+      * ``accum_dtype``    — MXU/VMEM accumulators in the Pallas engine
+        (stays f32 under the bf16 preset: casts happen only at ref-write
+        boundaries).
+      * ``grad_acc_dtype`` — microbatch gradient-accumulation buffer.
+    """
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    spectral_dtype: str = "float32"
+    accum_dtype: str = "float32"
+    grad_acc_dtype: str = "float32"
+
+    _ALIASES = {"f32": "float32", "float32": "float32",
+                "bf16": "bfloat16", "bfloat16": "bfloat16"}
+
+    @classmethod
+    def from_name(cls, name: str) -> "PrecisionPolicy":
+        """Presets: "f32"/"float32" → pure f32; "bf16"/"bfloat16" → bf16
+        compute + spectral operands, f32 master params / accumulators /
+        grad accumulation (standard mixed-precision training).
+
+        Any other dtype name falls back to a uniform policy at that dtype
+        (params, compute, and spectral operands all at `name`; f32
+        accumulation) — preserving the historical ``FNOConfig.dtype``
+        contract for e.g. "float64"; the name is validated when the dtype
+        is first used."""
+        canon = cls._ALIASES.get(name)
+        if canon is None:
+            return cls(param_dtype=name, compute_dtype=name,
+                       spectral_dtype=name)
+        if canon == "float32":
+            return cls()
+        return cls(param_dtype="float32", compute_dtype="bfloat16",
+                   spectral_dtype="bfloat16", accum_dtype="float32",
+                   grad_acc_dtype="float32")
+
+    @property
+    def is_mixed(self) -> bool:
+        return self.compute_dtype != self.param_dtype
+
+
+@dataclasses.dataclass(frozen=True)
 class FNOConfig:
     """Fourier Neural Operator configuration (the paper's architecture)."""
 
@@ -168,7 +226,14 @@ class FNOConfig:
     weight_mode: str = "shared"  # shared (paper CGEMM) | per_mode (classic FNO)
     lifting_dim: int = 0  # 0 => 2*hidden
     path: str = "xla"  # ref | xla | pallas
-    dtype: str = "float32"
+    dtype: str = "float32"  # precision preset name (PrecisionPolicy.from_name)
+    policy: Optional[PrecisionPolicy] = None  # explicit override of `dtype`
+
+    @property
+    def precision(self) -> PrecisionPolicy:
+        """The resolved precision policy (explicit `policy` wins, else the
+        `dtype` preset)."""
+        return self.policy or PrecisionPolicy.from_name(self.dtype)
 
     @property
     def truncation_ratio(self) -> Tuple[float, ...]:

@@ -7,11 +7,24 @@ dims 32-128 (Sec. 5). ``fno2d-large`` is the end-to-end training target
 rank-3 workload (Li et al. 2020 §5.3 uses 64³ grids; we keep the same 25%
 per-axis truncation) running on the rank-generic fused engine.
 """
-from repro.configs.base import FNOConfig
+import dataclasses
+
+from repro.configs.base import FNOConfig, PrecisionPolicy
 
 ARCH_ID_1D = "fno1d"
 ARCH_ID_2D = "fno2d"
 ARCH_ID_3D = "fno3d"
+
+
+def with_precision(cfg: FNOConfig, dtype: str) -> FNOConfig:
+    """Apply a ``--dtype`` preset ("f32"/"bf16") to an FNO config.
+
+    The resolved :class:`PrecisionPolicy` travels inside the config, so
+    every downstream layer (init, apply, fused kernels, train step,
+    roofline byte model) sees the same policy object.
+    """
+    pol = PrecisionPolicy.from_name(dtype)
+    return dataclasses.replace(cfg, dtype=pol.compute_dtype, policy=pol)
 
 
 def fno1d() -> FNOConfig:

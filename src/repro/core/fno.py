@@ -7,6 +7,13 @@ Architecture (paper Fig. 1 / Li et al. 2020):
 Rank is taken from ``cfg.ndim`` — the 3D variant (Navier–Stokes-class
 workloads, Li et al. §5.3) runs on the same rank-generic fused engine as
 1D/2D. Functional params-as-pytree; channel-first [B, C, *spatial].
+
+Mixed precision (cfg.precision — a PrecisionPolicy): parameters are
+initialized and updated at the *param* dtype (f32 master weights under the
+bf16 preset); ``apply_fno`` casts the input once to the compute dtype and
+the dense/bypass layers follow the activation dtype, so the whole forward
+runs at compute precision while the gradients flowing back to the master
+params are upcast by the cast-VJPs. The loss is always reduced in f32.
 """
 from __future__ import annotations
 
@@ -26,14 +33,21 @@ def _dense_init(key, din, dout, dtype=jnp.float32):
             "b": jnp.zeros((dout,), dtype)}
 
 
-def _dense(p, x):  # x: [B, C, *sp] pointwise over channels
-    y = jnp.einsum("bc...,cd->bd...", x, p["w"])
-    return y + p["b"].reshape((1, -1) + (1,) * (y.ndim - 2))
+def _dense(p, x):  # x: [B, C, *sp] pointwise over channels; follows x dtype
+    y = jnp.einsum("bc...,cd->bd...", x, p["w"].astype(x.dtype))
+    # The bias is broadcast BEFORE the compute-dtype cast: the cast's VJP
+    # then upcasts the cotangent to f32 ahead of the broadcast's sum-VJP,
+    # so the bias-grad reduction accumulates in f32. (A bf16 reduce over a
+    # coherent cotangent field swamps — the accumulator sticks at its
+    # first power of two; the weight grads are immune because dot-general
+    # VJPs already accumulate in f32.)
+    b = p["b"].reshape((1, -1) + (1,) * (y.ndim - 2))
+    return y + jnp.broadcast_to(b, y.shape).astype(x.dtype)
 
 
 def init_fno(key: jax.Array, cfg: FNOConfig) -> Dict[str, Any]:
     cfg.validate()
-    dtype = jnp.dtype(cfg.dtype)
+    dtype = jnp.dtype(cfg.precision.param_dtype)
     lift = cfg.lifting_dim or 2 * cfg.hidden
     keys = jax.random.split(key, 4 + 2 * cfg.num_layers)
     modes = tuple(cfg.modes)
@@ -57,25 +71,36 @@ def init_fno(key: jax.Array, cfg: FNOConfig) -> Dict[str, Any]:
 
 def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
               *, path: str = None, variant: str = "full") -> jax.Array:
-    """x: [B, in_channels, *spatial] -> [B, out_channels, *spatial]."""
+    """x: [B, in_channels, *spatial] -> [B, out_channels, *spatial].
+
+    Runs at cfg.precision.compute_dtype (the single activation cast lives
+    here; the spectral kernels receive the policy and keep their f32
+    accumulators)."""
     path = path or cfg.path
+    pol = cfg.precision
+    x = x.astype(jnp.dtype(pol.compute_dtype))
     h = _dense(params["lift2"], jax.nn.gelu(_dense(params["lift1"], x)))
     for blk in params["blocks"]:
         if cfg.ndim == 1:
             s = sc.apply_spectral_1d(blk["spectral"], h, cfg.modes[0],
-                                     path=path)
+                                     path=path, policy=pol)
         elif cfg.ndim == 2:
             s = sc.apply_spectral_2d(blk["spectral"], h, tuple(cfg.modes),
-                                     path=path, variant=variant)
+                                     path=path, variant=variant, policy=pol)
         else:
             s = sc.apply_spectral_3d(blk["spectral"], h, tuple(cfg.modes),
-                                     path=path, variant=variant)
-        h = jax.nn.gelu(s + _dense(blk["bypass"], h))
+                                     path=path, variant=variant, policy=pol)
+        h = jax.nn.gelu(s.astype(h.dtype) + _dense(blk["bypass"], h))
     return _dense(params["proj2"], jax.nn.gelu(_dense(params["proj1"], h)))
 
 
 def relative_l2(pred: jax.Array, target: jax.Array) -> jax.Array:
-    """Mean relative L2 loss over the batch (standard FNO objective)."""
+    """Mean relative L2 loss over the batch (standard FNO objective).
+
+    Always reduced in f32 — the loss is the one place a bf16 sum would
+    visibly bias training."""
+    pred = pred.astype(jnp.float32)
+    target = target.astype(jnp.float32)
     b = pred.shape[0]
     diff = jnp.sqrt(jnp.sum((pred - target).reshape(b, -1) ** 2, axis=-1))
     norm = jnp.sqrt(jnp.sum(target.reshape(b, -1) ** 2, axis=-1))

@@ -221,6 +221,66 @@ def wgrad_operand_mats(spatial: Tuple[int, ...], modes: Tuple[int, ...],
 
 
 # ---------------------------------------------------------------------------
+# Batched outer-stage operands (partial fusion, rank ≥ 3).
+#
+# The paper-faithful partial path transforms the outer axes s_2..s_R with
+# standalone kernels. Those stages are separable, so their composition is a
+# single matmul with the Kronecker product of the per-axis DFT matrices:
+# one kernel launch for ALL outer axes instead of one per axis (ROADMAP
+# follow-up). Row index = flattened (s_2..s_R) in natural order; column
+# index = flattened (k_R..k_2) — the spectrum layout the fused middle
+# expects. Built in f32 on host (cast at the call site like every other
+# operand), lru_cached, and complex-carried as (real, imag).
+# ---------------------------------------------------------------------------
+def _kron_ordered(factors):
+    """Combine complex per-axis factors F_j[a_j, b_j] (axis order s_2..s_R)
+    into M[(a_2..a_R), (b_R..b_2)]."""
+    r1 = len(factors)
+    subs_in = [f"{chr(97 + 2 * j)}{chr(98 + 2 * j)}" for j in range(r1)]
+    rows = "".join(s[0] for s in subs_in)
+    cols = "".join(subs_in[j][1] for j in reversed(range(r1)))
+    m = np.einsum(",".join(subs_in) + "->" + rows + cols, *factors)
+    nr = int(np.prod([f.shape[0] for f in factors]))
+    nc = int(np.prod([f.shape[1] for f in factors]))
+    return m.reshape(nr, nc)
+
+
+@functools.lru_cache(maxsize=64)
+def outer_fwd_mats(outer_spatial: Tuple[int, ...],
+                   outer_modes: Tuple[int, ...],
+                   dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Combined forward operand for the outer axes (s_2..s_R): real input,
+    truncated spectrum out. [Πn_j, Πk_j], columns ordered (k_R..k_2)."""
+    factors = []
+    for n, k in zip(outer_spatial, outer_modes):
+        fr, fi = cdft_mats(n, k, False, "float64")
+        factors.append(fr + 1j * fi)
+    m = _kron_ordered(factors)
+    return m.real.astype(dtype), m.imag.astype(dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def outer_inv_mats(outer_spatial: Tuple[int, ...],
+                   outer_modes: Tuple[int, ...],
+                   dtype: str = "float32") -> Tuple[np.ndarray, np.ndarray]:
+    """Combined inverse operand for the outer axes: padded complex inverse
+    along s_2..s_{R-1} and hermitian-folded real inverse along s_R, real
+    output. [Πk_j, Πn_j], rows ordered (k_R..k_2), columns (s_2..s_R);
+    consumed as y = Xr@Er − Xi@Ei (only the real part survives)."""
+    factors = []
+    last = len(outer_spatial) - 1
+    for j, (n, k) in enumerate(zip(outer_spatial, outer_modes)):
+        er, ei = (irdft_mats(n, k, "float64") if j == last
+                  else cdft_mats(n, k, True, "float64"))
+        factors.append(er + 1j * ei)
+    # _kron_ordered(F_j[a,b]) lays rows out in factor order and columns
+    # reversed; feeding the factors reversed (s_R..s_2) therefore yields
+    # rows (k_R..k_2) and columns (s_2..s_R).
+    m = _kron_ordered(factors[::-1])
+    return m.real.astype(dtype), m.imag.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # XLA-path transforms (matmul formulation; fused by XLA, no Pallas)
 # ---------------------------------------------------------------------------
 def truncated_rdft(x: jax.Array, modes: int) -> Tuple[jax.Array, jax.Array]:

@@ -2,15 +2,18 @@
 path (ref | xla | pallas) and weight mode (shared | per_mode), rank 1/2/3.
 
 Functional style: ``init(key) -> params``, ``apply(params, x) -> y``.
-Channel-first layout [B, C, *spatial], matching the paper.
+Channel-first layout [B, C, *spatial], matching the paper. ``apply_*``
+accept an optional ``policy`` (PrecisionPolicy) forwarded to the kernels;
+init takes the *param* dtype (master weights — f32 under the bf16 preset).
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import PrecisionPolicy
 from repro.kernels import ops
 
 
@@ -34,10 +37,12 @@ def init_spectral_1d(key: jax.Array, in_ch: int, out_ch: int, modes: int,
 
 
 def apply_spectral_1d(params: Dict[str, jax.Array], x: jax.Array, modes: int,
-                      *, path: str = "xla", **kw) -> jax.Array:
+                      *, path: str = "xla",
+                      policy: Optional[PrecisionPolicy] = None,
+                      **kw) -> jax.Array:
     """x: [B, C_in, N] -> [B, C_out, N]."""
     return ops.spectral_layer_1d(x, params["wr"], params["wi"], modes,
-                                 path=path, **kw)
+                                 path=path, policy=policy, **kw)
 
 
 def init_spectral_2d(key: jax.Array, in_ch: int, out_ch: int,
@@ -48,10 +53,13 @@ def init_spectral_2d(key: jax.Array, in_ch: int, out_ch: int,
 
 def apply_spectral_2d(params: Dict[str, jax.Array], x: jax.Array,
                       modes: Tuple[int, int], *, path: str = "xla",
-                      variant: str = "full", **kw) -> jax.Array:
+                      variant: str = "full",
+                      policy: Optional[PrecisionPolicy] = None,
+                      **kw) -> jax.Array:
     """x: [B, C_in, X, Y] -> [B, C_out, X, Y]."""
     return ops.spectral_layer_2d(x, params["wr"], params["wi"], modes,
-                                 path=path, variant=variant, **kw)
+                                 path=path, variant=variant, policy=policy,
+                                 **kw)
 
 
 def init_spectral_3d(key: jax.Array, in_ch: int, out_ch: int,
@@ -62,7 +70,10 @@ def init_spectral_3d(key: jax.Array, in_ch: int, out_ch: int,
 
 def apply_spectral_3d(params: Dict[str, jax.Array], x: jax.Array,
                       modes: Tuple[int, int, int], *, path: str = "xla",
-                      variant: str = "full", **kw) -> jax.Array:
+                      variant: str = "full",
+                      policy: Optional[PrecisionPolicy] = None,
+                      **kw) -> jax.Array:
     """x: [B, C_in, X, Y, Z] -> [B, C_out, X, Y, Z]."""
     return ops.spectral_layer_3d(x, params["wr"], params["wi"], modes,
-                                 path=path, variant=variant, **kw)
+                                 path=path, variant=variant, policy=policy,
+                                 **kw)

@@ -62,25 +62,29 @@ _F32 = jnp.float32
 _SEMANTICS = ("parallel", "parallel", "arbitrary")
 
 
-def _dot(a, b, axis):
-    """Contract `axis` of a with dim 0 of b; the new dim is appended last."""
+def _dot(a, b, axis, acc=_F32):
+    """Contract `axis` of a with dim 0 of b; the new dim is appended last.
+
+    `acc` is the MXU accumulation dtype (PrecisionPolicy.accum_dtype —
+    stays f32 under the bf16 policy so only the ref-write boundaries cast
+    down)."""
     return jax.lax.dot_general(a, b, (((axis,), (0,)), ((), ())),
-                               preferred_element_type=_F32)
+                               preferred_element_type=acc)
 
 
-def _cstage(zr, zi, mr, mi, axis):
+def _cstage(zr, zi, mr, mi, axis, acc=_F32):
     """One complex DFT stage: (zr + i·zi) · (mr + i·mi) along `axis`.
 
     zi=None marks a real input (the first rDFT stage) — the imaginary
     products vanish.
     """
     if zi is None:
-        return _dot(zr, mr, axis), _dot(zr, mi, axis)
-    return (_dot(zr, mr, axis) - _dot(zi, mi, axis),
-            _dot(zr, mi, axis) + _dot(zi, mr, axis))
+        return _dot(zr, mr, axis, acc), _dot(zr, mi, axis, acc)
+    return (_dot(zr, mr, axis, acc) - _dot(zi, mi, axis, acc),
+            _dot(zr, mi, axis, acc) + _dot(zi, mr, axis, acc))
 
 
-def _dft_chain(z, mats, rank):
+def _dft_chain(z, mats, rank, acc=_F32):
     """Run the forward DFT chain over the trailing `rank` spatial axes.
 
     z: [bb,bc,s_1..s_R] real; mats: flat (mr, mi) pairs in stage order
@@ -89,7 +93,7 @@ def _dft_chain(z, mats, rank):
     zr, zi = z, None
     for i in range(rank):
         zr, zi = _cstage(zr, zi, mats[2 * i][...], mats[2 * i + 1][...],
-                         1 + rank - i)
+                         1 + rank - i, acc)
     return zr, zi
 
 
@@ -97,8 +101,9 @@ def _dft_chain(z, mats, rank):
 # Full fusion: [rDFT → cDFT… → CGEMM → icDFT… → irDFT] in one kernel
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _make_fwd_kernel(rank: int, per_mode: bool):
+def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32"):
     r = rank
+    acc = jnp.dtype(acc_dtype)
 
     def kernel(*refs):
         x_ref, wr_ref, wi_ref = refs[:3]
@@ -114,7 +119,7 @@ def _make_fwd_kernel(rank: int, per_mode: bool):
 
         # Truncated forward DFT chain — the FFT writing its A-tile to
         # "shared memory" (VMEM registers).
-        ar, ai = _dft_chain(x_ref[...], fwd, r)
+        ar, ai = _dft_chain(x_ref[...], fwd, r, acc)
 
         # CGEMM over hidden (the k-loop MAC).
         wr, wi = wr_ref[...], wi_ref[...]
@@ -128,7 +133,7 @@ def _make_fwd_kernel(rank: int, per_mode: bool):
 
         def dg(a, w):
             return jax.lax.dot_general(a, w, dims,
-                                       preferred_element_type=_F32)
+                                       preferred_element_type=acc)
 
         accr[...] += dg(ar, wr) - dg(ai, wi)
         acci[...] += dg(ar, wi) + dg(ai, wr)
@@ -142,18 +147,21 @@ def _make_fwd_kernel(rank: int, per_mode: bool):
                 axis = (r - 1 - i) if per_mode else (r - i)
                 mr, mi = inv[2 * i][...], inv[2 * i + 1][...]
                 if i < r - 1:
-                    tr, ti = _cstage(tr, ti, mr, mi, axis)
+                    tr, ti = _cstage(tr, ti, mr, mi, axis, acc)
                 else:
-                    y_ref[...] = (_dot(tr, mr, axis)
-                                  - _dot(ti, mi, axis)).astype(y_ref.dtype)
+                    y_ref[...] = (_dot(tr, mr, axis, acc)
+                                  - _dot(ti, mi, axis, acc)
+                                  ).astype(y_ref.dtype)
 
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret",
+                                             "out_dtype", "acc_dtype"))
 def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
                      *mats: jax.Array, bb: int, bo: int, bh: int,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: bool = False, out_dtype: str = None,
+                     acc_dtype: str = "float32") -> jax.Array:
     """Whole rank-R FNO spectral layer in one kernel.
 
     x: [B,H,s_1..s_R] real; w: [O,H] or [O,H,K_1..K_R]; mats: flat
@@ -162,7 +170,10 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     ``spectral.fused_operand_mats``. Returns y [B,O,s_1..s_R] real.
 
     All of B,O,H must divide by (bb,bo,bh); spatial/modes dims are whole
-    blocks (ops.py pads).
+    blocks (ops.py pads). out_dtype overrides the output dtype (default:
+    x.dtype — the backward pass emits dx at the primal dtype straight from
+    the f32 accumulator); acc_dtype is the VMEM accumulator dtype
+    (PrecisionPolicy.accum_dtype).
     """
     r = x.ndim - 2
     b, h = x.shape[:2]
@@ -186,14 +197,16 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     m_specs = [pl.BlockSpec(m.shape, lambda i, j, k: (0, 0)) for m in mats]
     y_spec = pl.BlockSpec((bb, bo) + spatial, lambda i, j, k: (i, j) + zr)
 
+    acc = jnp.dtype(acc_dtype)
     return pl.pallas_call(
-        _make_fwd_kernel(r, per_mode),
+        _make_fwd_kernel(r, per_mode, acc_dtype),
         grid=grid,
         in_specs=[x_spec, w_spec, w_spec] + m_specs,
         out_specs=y_spec,
-        out_shape=jax.ShapeDtypeStruct((b, o) + spatial, x.dtype),
-        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
-                        pltpu.VMEM(acc_shape, _F32)],
+        out_shape=jax.ShapeDtypeStruct((b, o) + spatial,
+                                       jnp.dtype(out_dtype or x.dtype)),
+        scratch_shapes=[pltpu.VMEM(acc_shape, acc),
+                        pltpu.VMEM(acc_shape, acc)],
         compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
     )(x, wr, wi, *mats)
@@ -204,8 +217,10 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
 # input whose outer axes were already transformed by standalone kernels.
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _make_core_kernel(n_spec: int, per_mode: bool):
+def _make_core_kernel(n_spec: int, per_mode: bool,
+                      acc_dtype: str = "float32"):
     s = n_spec  # trailing already-spectral axes (K_R .. K_2)
+    acc = jnp.dtype(acc_dtype)
 
     def kernel(zr_ref, zi_ref, wr_ref, wi_ref, fr_ref, fi_ref,
                gr_ref, gi_ref, yr_ref, yi_ref, accr, acci):
@@ -217,7 +232,7 @@ def _make_core_kernel(n_spec: int, per_mode: bool):
         # Truncated cDFT along s_1 (the GEMM-adjacent stage): contract
         # dim 2 -> [bb,bh,K_R..K_2,K_1].
         ar, ai = _cstage(zr_ref[...], zi_ref[...], fr_ref[...], fi_ref[...],
-                         2)
+                         2, acc)
         wr, wi = wr_ref[...], wi_ref[...]
         if per_mode:
             dims = (((1,), (1,)),
@@ -227,7 +242,7 @@ def _make_core_kernel(n_spec: int, per_mode: bool):
 
         def dg(a, w):
             return jax.lax.dot_general(a, w, dims,
-                                       preferred_element_type=_F32)
+                                       preferred_element_type=acc)
 
         accr[...] += dg(ar, wr) - dg(ai, wi)
         acci[...] += dg(ar, wi) + dg(ai, wr)
@@ -237,18 +252,20 @@ def _make_core_kernel(n_spec: int, per_mode: bool):
             # Padded icDFT along s_1 (complex output pair).
             axis = s if per_mode else 1 + s
             tr, ti = _cstage(accr[...], acci[...], gr_ref[...], gi_ref[...],
-                             axis)
+                             axis, acc)
             yr_ref[...] = tr.astype(yr_ref.dtype)
             yi_ref[...] = ti.astype(yi_ref.dtype)
 
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret",
+                                             "acc_dtype"))
 def fused_fnond_core_call(zr: jax.Array, zi: jax.Array, wr: jax.Array,
                           wi: jax.Array, fr: jax.Array, fi: jax.Array,
                           gr: jax.Array, gi: jax.Array, *, bb: int, bo: int,
-                          bh: int, interpret: bool = False
+                          bh: int, interpret: bool = False,
+                          acc_dtype: str = "float32"
                           ) -> Tuple[jax.Array, jax.Array]:
     """Partial-fusion middle: z [B,H,s_1,K_R..K_2] complex pair (outer
     stages already applied); w [O,H] or [O,H,K_1..K_R]; f [s_1,K_1];
@@ -281,15 +298,16 @@ def fused_fnond_core_call(zr: jax.Array, zi: jax.Array, wr: jax.Array,
     mat = lambda m: pl.BlockSpec(m.shape, lambda i, j, k: (0, 0))
     out_sd = jax.ShapeDtypeStruct(y_shape, zr.dtype)
 
+    acc = jnp.dtype(acc_dtype)
     return pl.pallas_call(
-        _make_core_kernel(s, per_mode),
+        _make_core_kernel(s, per_mode, acc_dtype),
         grid=grid,
         in_specs=[z_spec, z_spec, w_spec, w_spec, mat(fr), mat(fi),
                   mat(gr), mat(gi)],
         out_specs=[y_spec, y_spec],
         out_shape=[out_sd, out_sd],
-        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
-                        pltpu.VMEM(acc_shape, _F32)],
+        scratch_shapes=[pltpu.VMEM(acc_shape, acc),
+                        pltpu.VMEM(acc_shape, acc)],
         compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
     )(zr, zi, wr, wi, fr, fi, gr, gi)
@@ -311,8 +329,10 @@ def fused_fnond_core_call(zr: jax.Array, zi: jax.Array, wr: jax.Array,
 # the accumulation loop.
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _make_wgrad_kernel(rank: int, per_mode: bool):
+def _make_wgrad_kernel(rank: int, per_mode: bool,
+                       acc_dtype: str = "float32"):
     r = rank
+    acc = jnp.dtype(acc_dtype)
 
     def kernel(*refs):
         x_ref, g_ref = refs[:2]
@@ -326,8 +346,8 @@ def _make_wgrad_kernel(rank: int, per_mode: bool):
             accr[...] = jnp.zeros_like(accr)
             acci[...] = jnp.zeros_like(acci)
 
-        ar, ai = _dft_chain(x_ref[...], xm, r)  # A: [bb,bh,K_R..K_1]
-        hr, hi = _dft_chain(g_ref[...], gm, r)  # Ĝ: [bb,bo,K_R..K_1]
+        ar, ai = _dft_chain(x_ref[...], xm, r, acc)  # A: [bb,bh,K_R..K_1]
+        hr, hi = _dft_chain(g_ref[...], gm, r, acc)  # Ĝ: [bb,bo,K_R..K_1]
 
         if per_mode:  # batch the spectral axes, contract batch
             dims = (((0,), (0,)),
@@ -338,7 +358,7 @@ def _make_wgrad_kernel(rank: int, per_mode: bool):
 
         def rdot(p, q):
             return jax.lax.dot_general(p, q, dims,
-                                       preferred_element_type=_F32)
+                                       preferred_element_type=acc)
 
         accr[...] += rdot(hr, ar) - rdot(hi, ai)
         acci[...] += rdot(hr, ai) + rdot(hi, ar)
@@ -353,10 +373,12 @@ def _make_wgrad_kernel(rank: int, per_mode: bool):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bb", "bo", "bh", "per_mode", "interpret"))
+    jax.jit, static_argnames=("bb", "bo", "bh", "per_mode", "interpret",
+                              "out_dtype", "acc_dtype"))
 def fused_fnond_wgrad_call(x: jax.Array, g: jax.Array, *mats: jax.Array,
                            bb: int, bo: int, bh: int, per_mode: bool,
-                           interpret: bool = False
+                           interpret: bool = False, out_dtype: str = None,
+                           acc_dtype: str = "float32"
                            ) -> Tuple[jax.Array, jax.Array]:
     """x: [B,H,s_1..s_R] primal; g: [B,O,s_1..s_R] cotangent; mats: flat
     (mr, mi) pairs — R forward stages for x then R adjoint-forward stages
@@ -364,7 +386,9 @@ def fused_fnond_wgrad_call(x: jax.Array, g: jax.Array, *mats: jax.Array,
     ``spectral.wgrad_operand_mats``.
 
     Returns (dwr, dwi): [O,H] shared, or [K_R..K_1,O,H] per-mode (caller
-    transposes back to [O,H,K_1..K_R]).
+    transposes back to [O,H,K_1..K_R]). out_dtype sets the dW emission
+    dtype (PrecisionPolicy.param_dtype under mixed precision: cotangents
+    accumulate at acc_dtype in VMEM, dW is cast once at the ref write).
     """
     r = x.ndim - 2
     b, h = x.shape[:2]
@@ -387,16 +411,17 @@ def fused_fnond_wgrad_call(x: jax.Array, g: jax.Array, *mats: jax.Array,
         dw_spec = pl.BlockSpec((bo, bh), lambda i, j, kb: (i, j))
         dw_shape = (o, h)
         acc_shape = (bo, bh)
-    out_sd = jax.ShapeDtypeStruct(dw_shape, x.dtype)
+    out_sd = jax.ShapeDtypeStruct(dw_shape, jnp.dtype(out_dtype or x.dtype))
 
+    acc = jnp.dtype(acc_dtype)
     return pl.pallas_call(
-        _make_wgrad_kernel(r, per_mode),
+        _make_wgrad_kernel(r, per_mode, acc_dtype),
         grid=grid,
         in_specs=[x_spec, g_spec] + m_specs,
         out_specs=[dw_spec, dw_spec],
         out_shape=[out_sd, out_sd],
-        scratch_shapes=[pltpu.VMEM(acc_shape, _F32),
-                        pltpu.VMEM(acc_shape, _F32)],
+        scratch_shapes=[pltpu.VMEM(acc_shape, acc),
+                        pltpu.VMEM(acc_shape, acc)],
         compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
     )(x, g, *mats)

@@ -10,6 +10,11 @@ Handles (8,128)-alignment padding, block-size selection, and path dispatch:
 Padding rules: modes K and channel dims are padded with zeros — padded DFT
 rows/weight entries contribute exactly zero through the linear pipeline, so
 results are sliced back without error.
+
+Mixed precision: the spectral layers take an optional PrecisionPolicy. The
+compute-dtype casts live inside the custom_vjp, so the caller's primal and
+cotangent dtypes are preserved while the kernels run at the policy's
+compute dtype with f32 accumulators (ROADMAP.md §Precision policy).
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import PrecisionPolicy
 from repro.core import spectral
 from repro.kernels import cgemm as cgemm_k
 from repro.kernels import dft as dft_k
@@ -103,29 +109,35 @@ def _dft_operands(mats, dtype, pad_axis: int, to: int):
 
 def truncated_rdft(x: jax.Array, modes: int, *, path: str = "pallas",
                    block_rows: int = 256,
-                   interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
-    """rFFT along the last axis keeping `modes` bins. x: [..., N]."""
+                   interpret: Optional[bool] = None,
+                   operand_dtype: Optional[str] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """rFFT along the last axis keeping `modes` bins. x: [..., N].
+
+    operand_dtype overrides the DFT-matrix dtype (defaults to x.dtype;
+    PrecisionPolicy.spectral_dtype on the partial-fusion path)."""
     if path == "ref":
         return ref_k.ref_truncated_rdft(x, modes)
     if path == "xla":
         return spectral.truncated_rdft(x, modes)
-    mats = _dft_operands(spectral.rdft_mats(x.shape[-1], modes), x.dtype,
-                         1, _rup(modes, 128))
+    mats = _dft_operands(spectral.rdft_mats(x.shape[-1], modes),
+                         operand_dtype or x.dtype, 1, _rup(modes, 128))
     return _rowwise(dft_k._rdft_call, [x], mats, modes, block_rows,
                     interpret)
 
 
 def padded_irdft(xr: jax.Array, xi: jax.Array, n: int, *,
                  path: str = "pallas", block_rows: int = 256,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 operand_dtype: Optional[str] = None) -> jax.Array:
     """Inverse rFFT from `modes` bins zero-padded to length n."""
     if path == "ref":
         return ref_k.ref_padded_irdft(xr, xi, n)
     if path == "xla":
         return spectral.padded_irdft(xr, xi, n)
     kp = _rup(xr.shape[-1], 128)
-    mats = _dft_operands(spectral.irdft_mats(n, xr.shape[-1]), xr.dtype,
-                         0, kp)
+    mats = _dft_operands(spectral.irdft_mats(n, xr.shape[-1]),
+                         operand_dtype or xr.dtype, 0, kp)
     return _rowwise(dft_k._irdft_call, [xr, xi], mats, 0, block_rows,
                     interpret, pad_in_to=kp)
 
@@ -210,12 +222,22 @@ def _mode_pad(modes: Sequence[int]) -> int:
     return _rup(modes[0], 128) if len(modes) == 1 else 0
 
 
-def _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret,
-                 adjoint: bool = False):
+def _default_policy(x, wr) -> PrecisionPolicy:
+    """Policy inferred from the operands (legacy behavior): compute and
+    spectral operands at x.dtype, dW at the weight dtype, f32 accumulate."""
+    xd = jnp.dtype(x.dtype).name
+    return PrecisionPolicy(param_dtype=jnp.dtype(wr.dtype).name,
+                           compute_dtype=xd, spectral_dtype=xd)
+
+
+def _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol,
+                 adjoint: bool = False, out_dtype: str = None):
     """Pad to block multiples and invoke the rank-generic fused kernel.
 
     adjoint=True runs the input-cotangent pipeline: transposed DFT
-    operands; the caller passes (out, hidden)-swapped weights.
+    operands; the caller passes (out, hidden)-swapped weights. out_dtype
+    overrides the emission dtype (backward emits dx at the primal dtype
+    straight from the accumulator).
     """
     r = len(modes)
     b, h = x.shape[:2]
@@ -224,7 +246,7 @@ def _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret,
     kp = _mode_pad(modes)
     bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
     mats = spectral.fused_operand_mats(
-        tuple(x.shape[2:]), _modes_key(modes), jnp.dtype(x.dtype).name,
+        tuple(x.shape[2:]), _modes_key(modes), pol.spectral_dtype,
         adjoint, kp)
     xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
 
@@ -234,19 +256,62 @@ def _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret,
         return _pad_axis(_pad_axis(w, 0, op_), 1, hp)
 
     y = engine.fused_fnond_call(xpad, wpad(wr), wpad(wi), *mats,
-                                bb=bb, bo=bo, bh=bh, interpret=interpret)
+                                bb=bb, bo=bo, bh=bh, interpret=interpret,
+                                out_dtype=out_dtype,
+                                acc_dtype=pol.accum_dtype)
     return y[:b, :o]
 
 
-def _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret):
+def _outer_fwd_batched(x, spatial, modes, interpret, operand_dtype=None,
+                       block_rows=256):
+    """All outer forward stages (axes s_2..s_R) in ONE kernel launch.
+
+    The separable outer transforms collapse into a single matmul with the
+    Kronecker-combined operand (spectral.outer_fwd_mats) instead of one
+    standalone DFT launch per axis. x: [B,H,s_1..s_R] real; returns the
+    pair [B,H,s_1,K_R..K_2]."""
+    r = len(spatial)
+    ok = tuple(modes[1:])
+    kk = int(np.prod(ok))
+    mats = _dft_operands(
+        spectral.outer_fwd_mats(tuple(spatial[1:]), ok),
+        operand_dtype or x.dtype, 1, _rup(kk, 128))
+    lead = x.shape[:3]
+    xf = x.reshape(*lead, -1)
+    zr, zi = _rowwise(dft_k._rdft_call, [xf], mats, kk, block_rows,
+                      interpret)
+    shape = lead + tuple(modes[r - 1:0:-1])  # (K_R .. K_2)
+    return zr.reshape(shape), zi.reshape(shape)
+
+
+def _outer_inv_batched(tr, ti, spatial, interpret, operand_dtype=None,
+                       block_rows=256):
+    """All outer inverse stages in one launch (adjoint of
+    _outer_fwd_batched): t [B,O,s_1,K_R..K_2] complex pair → real
+    [B,O,s_1,s_2..s_R] via the combined padded-inverse operand."""
+    ok = tuple(tr.shape[3:][::-1])  # trailing (K_R..K_2) → (k_2..k_R)
+    kk = int(np.prod(ok))
+    kp = _rup(kk, 128)
+    mats = _dft_operands(
+        spectral.outer_inv_mats(tuple(spatial[1:]), ok),
+        operand_dtype or tr.dtype, 0, kp)
+    lead = tr.shape[:3]
+    flat = lambda t: t.reshape(*lead, -1)
+    y = _rowwise(dft_k._irdft_call, [flat(tr), flat(ti)], mats, 0,
+                 block_rows, interpret, pad_in_to=kp)
+    return y.reshape(lead + tuple(spatial[1:]))
+
+
+def _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret, pol):
     """Paper-faithful partial fusion for rank R ≥ 2: the outer R-1 forward
     and inverse transforms run as standalone kernels (dft.py); only
     [cDFT_s1 → CGEMM → icDFT_s1] — the stages adjacent to the GEMM — are
     fused, matching TurboFNO §4.3. Rank 1 has no outer stages (partial ==
-    full)."""
+    full). Rank ≥ 3 batches all outer axes into one launch per direction
+    (Kronecker-combined operands)."""
     r = len(modes)
     if r == 1:
-        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret)
+        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol)
     b, h = x.shape[:2]
     spatial = x.shape[2:]
     o = wr.shape[0]
@@ -254,24 +319,27 @@ def _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret):
     bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
     xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
 
-    # Outer forward stages: rDFT along s_R, then cDFT along s_{R-1}…s_2.
-    zr, zi = truncated_rdft(xpad, modes[-1], path="pallas",
-                            interpret=interpret)
-    for j in range(1, r - 1):
-        zr = jnp.moveaxis(zr, -(j + 1), -1)
-        zi = jnp.moveaxis(zi, -(j + 1), -1)
-        zr, zi = truncated_cdft(zr, zi, modes[r - 1 - j], path="pallas",
-                                interpret=interpret)
+    # Outer forward stages: rank 2 is a single rDFT along s_2; rank ≥ 3
+    # runs ALL outer axes (s_2..s_R) as one batched kernel launch. The
+    # operands follow pol.spectral_dtype like the fused middle's.
+    if r == 2:
+        zr, zi = truncated_rdft(xpad, modes[-1], path="pallas",
+                                interpret=interpret,
+                                operand_dtype=pol.spectral_dtype)
+    else:
+        zr, zi = _outer_fwd_batched(xpad, spatial, modes, interpret,
+                                    pol.spectral_dtype)
 
     # Fused middle on [B,H,s_1,K_R..K_2].
     mats = spectral.fused_operand_mats(
-        tuple(spatial), _modes_key(modes), jnp.dtype(x.dtype).name)
+        tuple(spatial), _modes_key(modes), pol.spectral_dtype)
     fr, fi = mats[2 * r - 2], mats[2 * r - 1]  # forward cDFT along s_1
     gr, gi = mats[2 * r], mats[2 * r + 1]      # inverse cDFT along s_1
     wp = lambda w: _pad_axis(_pad_axis(w, 0, op_), 1, hp)
     yr, yi = engine.fused_fnond_core_call(
         zr, zi, wp(wr), wp(wi), fr, fi, gr, gi,
-        bb=bb, bo=bo, bh=bh, interpret=interpret)
+        bb=bb, bo=bo, bh=bh, interpret=interpret,
+        acc_dtype=pol.accum_dtype)
 
     # Restore [B,O,s_1,K_R..K_2] layout and slice the channel padding.
     s = r - 1
@@ -282,30 +350,33 @@ def _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret):
     tr = jnp.transpose(yr, perm)[:b, :o]
     ti = jnp.transpose(yi, perm)[:b, :o]
 
-    # Outer inverse stages: icDFT along s_2…s_{R-1}, then final irDFT.
-    for j in range(r - 2):
-        tr, ti = padded_icdft(tr, ti, spatial[j + 1], path="pallas",
-                              interpret=interpret)
-        tr = jnp.moveaxis(tr, -1, 3 + j)
-        ti = jnp.moveaxis(ti, -1, 3 + j)
-    return padded_irdft(tr, ti, spatial[-1], path="pallas",
-                        interpret=interpret)
+    # Outer inverse stages, mirrored: single irDFT at rank 2, one batched
+    # launch at rank ≥ 3.
+    if r == 2:
+        return padded_irdft(tr, ti, spatial[-1], path="pallas",
+                            interpret=interpret,
+                            operand_dtype=pol.spectral_dtype)
+    return _outer_inv_batched(tr, ti, spatial, interpret,
+                              pol.spectral_dtype)
 
 
-def _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode):
-    """Fused weight cotangent: conj(Σ_b Ĝ·A) rank reduction."""
+def _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode, pol,
+                 out_dtype: str = None):
+    """Fused weight cotangent: conj(Σ_b Ĝ·A) rank reduction; dW emitted at
+    out_dtype (the param dtype under mixed precision)."""
     r = len(modes)
     b, h = x.shape[:2]
     o = gy.shape[1]
     kp = _mode_pad(modes)
     bb, bo, bh, bp, op_, hp = _blocks(x, o, bb, bo, bh)
     mats = spectral.wgrad_operand_mats(
-        tuple(x.shape[2:]), _modes_key(modes), jnp.dtype(x.dtype).name, kp)
+        tuple(x.shape[2:]), _modes_key(modes), pol.spectral_dtype, kp)
     xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
     gpad = _pad_axis(_pad_axis(gy, 0, bp), 1, op_)
     dwr, dwi = engine.fused_fnond_wgrad_call(
         xpad, gpad, *mats, bb=bb, bo=bo, bh=bh, per_mode=per_mode,
-        interpret=interpret)
+        interpret=interpret, out_dtype=out_dtype,
+        acc_dtype=pol.accum_dtype)
     if per_mode:  # kernel emits [K_R..K_1,O,H] -> [O,H,K_1..K_R]
         perm = (r, r + 1) + tuple(range(r - 1, -1, -1))
         sl = (slice(o), slice(h)) + tuple(slice(m) for m in modes)
@@ -313,41 +384,63 @@ def _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode):
     return dwr[:o, :h], dwi[:o, :h]
 
 
-def _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret):
+def _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret,
+                       pol):
+    # The compute-dtype casts live INSIDE the custom_vjp: primals (and
+    # therefore the cotangents the caller sees) stay at the caller's
+    # dtypes, while the kernels run at pol.compute_dtype.
+    cp = jnp.dtype(pol.compute_dtype)
+    x, wr, wi = x.astype(cp), wr.astype(cp), wi.astype(cp)
     if variant == "full":
-        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret)
-    return _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret)
+        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol)
+    return _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret, pol)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def _spectral_layer_nd_pallas(x, wr, wi, modes, variant, bb, bo, bh,
-                              interpret):
+                              interpret, pol):
     return _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh,
-                              interpret)
+                              interpret, pol)
 
 
-def _fnond_vjp_fwd(x, wr, wi, modes, variant, bb, bo, bh, interpret):
-    y = _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret)
+def _fnond_vjp_fwd(x, wr, wi, modes, variant, bb, bo, bh, interpret, pol):
+    y = _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret,
+                           pol)
     return y, (x, wr, wi)
 
 
-def _fnond_vjp_bwd(modes, variant, bb, bo, bh, interpret, res, gy):
+def _fnond_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, res, gy):
     # partial and full compute the same linear map, so one adjoint (the
-    # fully fused one) serves both variants.
+    # fully fused one) serves both variants. Mixed precision: operands run
+    # at pol.compute_dtype, the accumulators at pol.accum_dtype (f32), and
+    # the emissions happen once at the ref-write boundary — dx at the
+    # primal x dtype, dW at the param dtype.
     x, wr, wi = res
-    gy = gy.astype(x.dtype)
-    dx = _fnond_fused(gy, jnp.swapaxes(wr, 0, 1), jnp.swapaxes(wi, 0, 1),
-                      modes, bb, bo, bh, interpret, adjoint=True)
-    dwr, dwi = _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret,
-                            per_mode=wr.ndim == 2 + len(modes))
+    cp = jnp.dtype(pol.compute_dtype)
+    gy = gy.astype(cp)
+    wrc, wic = wr.astype(cp), wi.astype(cp)
+    dx = _fnond_fused(gy, jnp.swapaxes(wrc, 0, 1), jnp.swapaxes(wic, 0, 1),
+                      modes, bb, bo, bh, interpret, pol, adjoint=True,
+                      out_dtype=jnp.dtype(x.dtype).name)
+    dwr, dwi = _fnond_wgrad(x.astype(cp), gy, modes, bb, bo, bh, interpret,
+                            per_mode=wr.ndim == 2 + len(modes), pol=pol,
+                            out_dtype=jnp.dtype(wr.dtype).name)
     return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype))
 
 
 _spectral_layer_nd_pallas.defvjp(_fnond_vjp_fwd, _fnond_vjp_bwd)
 
 
-def _fnond_xla(x, wr, wi, modes):
-    """Staged matmul formulation of the rank-R layer, fused by XLA."""
+def _fnond_xla(x, wr, wi, modes, pol=None):
+    """Staged matmul formulation of the rank-R layer, fused by XLA.
+
+    With a policy, operands are cast to the compute dtype first and the
+    result is emitted at it — the parity reference for the pallas path at
+    matching precision (accumulation stays f32 via preferred_element_type
+    inside the spectral helpers)."""
+    if pol is not None:
+        cp = jnp.dtype(pol.compute_dtype)
+        x, wr, wi = x.astype(cp), wr.astype(cp), wi.astype(cp)
     r = len(modes)
     spatial = x.shape[2:]
     per_mode = wr.ndim == 2 + r
@@ -366,61 +459,75 @@ def _fnond_xla(x, wr, wi, modes):
         yr, yi = spectral.padded_icdft(yr, yi, spatial[j])
         yr = jnp.moveaxis(yr, -1, 2 + j)
         yi = jnp.moveaxis(yi, -1, 2 + j)
-    return spectral.padded_irdft(yr, yi, spatial[-1])
+    y = spectral.padded_irdft(yr, yi, spatial[-1])
+    return y.astype(x.dtype) if pol is not None else y
 
 
 def _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
-                       interpret):
+                       interpret, policy=None):
     modes = _modes_key(modes)
     if path == "ref":
+        if policy is not None:  # oracle runs in f32, emits at compute dtype
+            y32 = ref_k.ref_fnond(x.astype(jnp.float32),
+                                  wr.astype(jnp.float32),
+                                  wi.astype(jnp.float32), modes)
+            return y32.astype(policy.compute_dtype)
         return ref_k.ref_fnond(x, wr, wi, modes)
     if path == "xla":
-        return _fnond_xla(x, wr, wi, modes)
+        return _fnond_xla(x, wr, wi, modes, policy)
+    pol = policy or _default_policy(x, wr)
     return _spectral_layer_nd_pallas(x, wr, wi, modes, variant, bb, bo, bh,
-                                     _interpret(interpret))
+                                     _interpret(interpret), pol)
 
 
 def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: int, *, path: str = "pallas",
                       bb: int = 8, bo: int = 128, bh: int = 128,
-                      interpret: Optional[bool] = None) -> jax.Array:
+                      interpret: Optional[bool] = None,
+                      policy: Optional[PrecisionPolicy] = None) -> jax.Array:
     """Full 1D FNO spectral layer. x: [B,H,N]; w: [O,H] or [O,H,modes].
 
     path="pallas" is differentiable: jax.grad routes through the fused
-    backward kernels (custom_vjp), never falling back to XLA.
+    backward kernels (custom_vjp), never falling back to XLA. policy sets
+    the mixed-precision contract (bf16 kernel I/O with f32 accumulators);
+    None infers a uniform policy from the operand dtypes.
     """
     return _spectral_layer_nd(x, wr, wi, (modes,), path, "full", bb, bo, bh,
-                              interpret)
+                              interpret, policy)
 
 
 def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: Tuple[int, int], *, path: str = "pallas",
                       variant: str = "full", bb: int = 2, bo: int = 128,
                       bh: int = 32,
-                      interpret: Optional[bool] = None) -> jax.Array:
+                      interpret: Optional[bool] = None,
+                      policy: Optional[PrecisionPolicy] = None) -> jax.Array:
     """Full 2D FNO spectral layer, TurboFNO truncation convention.
 
     x: [B,H,X,Y]; w: [O,H] or [O,H,kx,ky]. variant: "partial" fuses only
     around the CGEMM (paper-faithful); "full" fuses the entire layer
     (beyond-paper, DESIGN.md §3.4). path="pallas" is differentiable via
-    custom_vjp (fused backward for both variants).
+    custom_vjp (fused backward for both variants). policy: see
+    spectral_layer_1d.
     """
     return _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
-                              interpret)
+                              interpret, policy)
 
 
 def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: Tuple[int, int, int], *, path: str = "pallas",
                       variant: str = "full", bb: int = 1, bo: int = 128,
                       bh: int = 16,
-                      interpret: Optional[bool] = None) -> jax.Array:
+                      interpret: Optional[bool] = None,
+                      policy: Optional[PrecisionPolicy] = None) -> jax.Array:
     """Full 3D FNO spectral layer (Navier–Stokes-class workloads).
 
     x: [B,H,X,Y,Z]; w: [O,H] or [O,H,kx,ky,kz]. Same engine, rank pinned
     to 3: variant "full" fuses the whole layer in one kernel; "partial"
     (paper-faithful) fuses only the GEMM-adjacent cDFT/icDFT pair and runs
-    the outer transforms as standalone kernels. path="pallas" is
-    differentiable via custom_vjp (fused backward for both variants).
+    the outer transforms as ONE batched standalone launch per direction.
+    path="pallas" is differentiable via custom_vjp (fused backward for
+    both variants). policy: see spectral_layer_1d.
     """
     return _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
-                              interpret)
+                              interpret, policy)

@@ -26,6 +26,15 @@ _DTYPE_BYTES = {
     "c128": 16,
 }
 
+_DTYPE_ALIASES = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
+                  "float64": "f64"}
+
+
+def dtype_bytes(name: str) -> int:
+    """Bytes per element for an HLO short name OR a numpy-style name
+    ("float32"/"bfloat16"), so PrecisionPolicy fields plug in directly."""
+    return _DTYPE_BYTES[_DTYPE_ALIASES.get(name, name)]
+
 _COLL_RE = re.compile(
     r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^\s]*))\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
@@ -201,3 +210,59 @@ def fno_model_flops(cfg, batch: int) -> float:
     proj = 2 * sp * (h * lift + lift * cfg.out_channels)
     fwd = batch * (cfg.num_layers * per_layer + lifting + proj)
     return 3.0 * fwd  # train step
+
+
+def fno_model_bytes(cfg, batch: int, *, variant: str = "full",
+                    training: bool = True) -> float:
+    """Dtype-aware HBM-traffic model of one FNO step (the memory side of
+    the roofline — TurboFNO's whole argument is that this term binds).
+
+    Reads cfg.precision (PrecisionPolicy): activations and kernel I/O move
+    at the compute dtype, DFT operand bundles at the spectral dtype, dW
+    emissions and the AdamW master update at the param dtype — so the
+    model predicts the bf16 traffic reduction directly (compute/spectral
+    terms halve, master-param terms don't).
+
+    Fused-path accounting per spectral layer: the full-fusion kernel
+    touches HBM exactly once per operand (read x, read W, read operands,
+    write y — the paper's fusion claim); partial fusion adds the
+    inter-launch complex pairs (written once, read once, both directions
+    batched into one outer launch per side at rank ≥ 3). Training adds the
+    adjoint pipeline (same traffic as forward, dx at the compute dtype)
+    and the fused wgrad (re-reads x and gy, writes dW at the param dtype),
+    plus the f32 master AdamW update (read params + 2 moments, write all
+    three, read grads).
+    """
+    import math
+    pol = cfg.precision
+    cb = dtype_bytes(pol.compute_dtype)
+    pb = dtype_bytes(pol.param_dtype)
+    sb = dtype_bytes(pol.spectral_dtype)
+    h = o = cfg.hidden
+    sp = math.prod(cfg.spatial)
+    lift = cfg.lifting_dim or 2 * h
+    act = batch * h * sp  # one hidden activation tensor (elements)
+    wmul = math.prod(cfg.modes) if cfg.weight_mode == "per_mode" else 1
+    wc = 2 * h * o * wmul  # complex spectral weight (re+im)
+    mats = 4 * sum(n * k for n, k in zip(cfg.spatial, cfg.modes))
+
+    spectral_fwd = (act + wc + act) * cb + mats * sb
+    if variant == "partial" and cfg.ndim >= 2:
+        kout = math.prod(cfg.modes[1:])
+        inter = 2 * batch * (h + o) * cfg.spatial[0] * kout  # complex pairs
+        spectral_fwd += 2 * inter * cb  # write + re-read between launches
+    bypass = (2 * act + h * o) * cb
+    per_layer = spectral_fwd + bypass
+    if training:
+        wgrad = 2 * act * cb + wc * pb
+        per_layer += spectral_fwd + wgrad + (2 * act + h * o) * cb
+
+    io = batch * sp * (cfg.in_channels + cfg.out_channels) * cb
+    lift_proj = (2 * batch * sp * (2 * lift + h)
+                 + cfg.in_channels * lift + lift * h
+                 + h * lift + lift * cfg.out_channels) * cb
+    total = cfg.num_layers * per_layer + lift_proj + io
+    if training:
+        n_params = cfg.param_count()
+        total += 7 * n_params * pb  # AdamW: r/w params + 2 moments, read g
+    return float(total)

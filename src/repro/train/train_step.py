@@ -51,12 +51,21 @@ def make_train_step(cfg, optimizer: AdamW, *, microbatches: int = 1,
     fusion for the rank ≥ 2 pallas layers (1D has a single stage, so the
     variants coincide).
 
-    grad_acc_dtype: dtype of the gradient-accumulation buffer (default
-    f32). The 340B+ archs use bf16 so the FSDP-sharded buffer halves —
-    the tradeoff that lets them fit 16 GB/chip at 256 chips
-    (EXPERIMENTS.md §Dry-run)."""
+    Mixed precision: an FNOConfig carries a PrecisionPolicy
+    (cfg.precision). Params stay f32 masters (init_fno), the forward/
+    backward run at the compute dtype inside apply_fno and the fused
+    kernels, the cast-VJPs upcast the incoming grads, and the AdamW
+    update therefore happens entirely in f32 — the standard
+    master-weight mixed-precision loop with zero special-casing here.
+
+    grad_acc_dtype: dtype of the gradient-accumulation buffer (default:
+    the config policy's grad_acc_dtype for FNO, else f32). The 340B+
+    archs use bf16 so the FSDP-sharded buffer halves — the tradeoff that
+    lets them fit 16 GB/chip at 256 chips (EXPERIMENTS.md §Dry-run)."""
     loss_fn = make_loss_fn(cfg, remat=remat, fno_path=fno_path,
                            fno_variant=fno_variant)
+    if grad_acc_dtype is None and isinstance(cfg, FNOConfig):
+        grad_acc_dtype = jnp.dtype(cfg.precision.grad_acc_dtype)
     acc_dt = grad_acc_dtype or jnp.float32
 
     def train_step(params, opt_state, batch):

@@ -85,6 +85,27 @@ def test_fusion_equals_staged(seed):
                                atol=2e-4)
 
 
+@given(dtype=st.sampled_from(["f32", "bf16"]), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=12)
+def test_fusion_equals_staged_both_dtypes(dtype, seed):
+    """The fused layer tracks the staged oracle under BOTH precision
+    presets — the PrecisionPolicy invariant: bf16 only loosens the
+    tolerance (f32 accumulators), it never changes the math."""
+    from repro.configs.base import PrecisionPolicy
+    pol = PrecisionPolicy.from_name(dtype)
+    tol = 2e-4 if dtype == "f32" else 2e-2
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    x = mk(2, 8, 64)
+    wr, wi = mk(8, 8) / 8, mk(8, 8) / 8
+    y1 = ops.spectral_layer_1d(x, wr, wi, 17, path="pallas", policy=pol)
+    assert jnp.dtype(y1.dtype).name == pol.compute_dtype
+    y0 = ref_k.ref_fno1d(x, wr, wi, 17)
+    scale = max(float(jnp.abs(np.asarray(y0)).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(y1, np.float32) / scale,
+                               np.asarray(y0) / scale, rtol=tol, atol=tol)
+
+
 @given(n=dims, frac=st.floats(0.1, 0.9), seed=st.integers(0, 2 ** 16))
 def test_rdft_roundtrip_is_projection(n, frac, seed):
     """Adjoint identity of the matrix factories: irDFT(rDFT(x)) equals the
