@@ -26,7 +26,7 @@ import tempfile
 import jax
 
 from repro.configs import get_config
-from repro.configs.fno import with_precision
+from repro.configs.fno import with_fuse_block, with_precision
 from repro.core import fno
 from repro.data import pde
 from repro.optim import AdamW
@@ -57,13 +57,22 @@ def main():
                     help="precision policy: bf16 = bf16 compute/spectral "
                          "operands with f32 master params + accumulators "
                          "(mixed precision); f32 = pure f32")
+    ap.add_argument("--fuse-block", action="store_true",
+                    help="pallas path: fuse each whole FNO block "
+                         "(spectral + 1x1 bypass + bias + GELU) into ONE "
+                         "pallas_call per layer, fwd and bwd")
     args = ap.parse_args()
 
     if args.full and args.arch not in (None, "fno2d-large"):
         ap.error("--full selects fno2d-large; it conflicts with "
                  f"--arch {args.arch}")
+    if args.fuse_block and args.path != "pallas":
+        ap.error("--fuse-block requires --path pallas (the staged paths "
+                 "stay the parity oracle)")
     arch = args.arch or ("fno2d-large" if args.full else "fno2d")
     cfg = with_precision(get_config(arch, reduced=not args.full), args.dtype)
+    if args.fuse_block:
+        cfg = with_fuse_block(cfg)
     key = jax.random.PRNGKey(0)
     params = fno.init_fno(key, cfg)
     n = cfg.spatial[0]
@@ -72,7 +81,8 @@ def main():
           f"weights={cfg.weight_mode}, path={args.path}, "
           f"variant={args.variant}, dtype={args.dtype} "
           f"(compute={cfg.precision.compute_dtype}, "
-          f"params={cfg.precision.param_dtype})")
+          f"params={cfg.precision.param_dtype}), "
+          f"fuse_block={cfg.fuse_block}")
 
     opt = AdamW(lr=cosine_warmup(args.lr, args.steps // 10 + 1, args.steps),
                 weight_decay=0.0)

@@ -5,6 +5,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# Fused-block trace-count guard (PR 4): one FNO block on the full-fusion
+# pallas path must stay exactly ONE pallas_call (and its grad exactly
+# four). Pure tracing — runs in a couple of seconds, no kernels execute.
+python scripts/fused_block_smoke.py
 # Collection gate: when pytest selection args (-k/-m/paths) could deselect
 # a broken module, a full collect-only pass must still fail the script on
 # any collection error. A bare run needs no gate — pytest itself exits

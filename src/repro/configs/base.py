@@ -228,6 +228,10 @@ class FNOConfig:
     path: str = "xla"  # ref | xla | pallas
     dtype: str = "float32"  # precision preset name (PrecisionPolicy.from_name)
     policy: Optional[PrecisionPolicy] = None  # explicit override of `dtype`
+    # Whole-block fusion on the pallas path: spectral + 1x1 bypass + bias +
+    # GELU in ONE pallas_call per layer (kernels/ops.fno_block_nd). The
+    # ref/xla paths ignore it and stay the staged parity oracle.
+    fuse_block: bool = False
 
     @property
     def precision(self) -> PrecisionPolicy:

@@ -27,6 +27,14 @@ def with_precision(cfg: FNOConfig, dtype: str) -> FNOConfig:
     return dataclasses.replace(cfg, dtype=pol.compute_dtype, policy=pol)
 
 
+def with_fuse_block(cfg: FNOConfig, on: bool = True) -> FNOConfig:
+    """Toggle whole-block fusion: on the pallas path each FNO layer
+    (spectral + 1×1 bypass + bias + GELU) lowers to ONE pallas_call
+    (``kernels/ops.fno_block_nd``) instead of a fused spectral kernel plus
+    ~4 XLA epilogue ops. Composes with :func:`with_precision`."""
+    return dataclasses.replace(cfg, fuse_block=on)
+
+
 def fno1d() -> FNOConfig:
     return FNOConfig(
         name="fno1d", ndim=1, hidden=64, num_layers=4,

@@ -4,6 +4,11 @@ Architecture (paper Fig. 1 / Li et al. 2020):
   lifting pointwise MLP  →  L × [spectral conv + 1x1 bypass conv + GELU]
   →  projection pointwise MLP.
 
+With ``cfg.fuse_block`` each whole block — spectral + bypass + bias +
+GELU — runs as ONE pallas_call per layer on the pallas path, forward and
+backward (kernels/ops.fno_block_nd); the staged composition below remains
+the parity oracle and the only path for ref/xla.
+
 Rank is taken from ``cfg.ndim`` — the 3D variant (Navier–Stokes-class
 workloads, Li et al. §5.3) runs on the same rank-generic fused engine as
 1D/2D. Functional params-as-pytree; channel-first [B, C, *spatial].
@@ -80,7 +85,18 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
     pol = cfg.precision
     x = x.astype(jnp.dtype(pol.compute_dtype))
     h = _dense(params["lift2"], jax.nn.gelu(_dense(params["lift1"], x)))
+    # Whole-block fusion (cfg.fuse_block, pallas path only): spectral +
+    # bypass + bias + GELU collapse into ONE pallas_call per layer — the
+    # bypass GEMM rides the engine's hidden k-loop and the activation is
+    # applied in the iDFT epilogue, so the per-layer intermediates never
+    # round-trip HBM. The staged composition below stays the oracle.
+    fuse = cfg.fuse_block and path == "pallas"
     for blk in params["blocks"]:
+        if fuse:
+            h = sc.apply_fno_block_nd(blk["spectral"], blk["bypass"], h,
+                                      tuple(cfg.modes), path=path,
+                                      variant=variant, policy=pol)
+            continue
         if cfg.ndim == 1:
             s = sc.apply_spectral_1d(blk["spectral"], h, cfg.modes[0],
                                      path=path, policy=pol)

@@ -77,3 +77,22 @@ def apply_spectral_3d(params: Dict[str, jax.Array], x: jax.Array,
     return ops.spectral_layer_3d(x, params["wr"], params["wi"], modes,
                                  path=path, variant=variant, policy=policy,
                                  **kw)
+
+
+def apply_fno_block_nd(spec_params: Dict[str, jax.Array],
+                       byp_params: Dict[str, jax.Array], x: jax.Array,
+                       modes: Sequence[int], *, path: str = "pallas",
+                       variant: str = "full",
+                       policy: Optional[PrecisionPolicy] = None,
+                       **kw) -> jax.Array:
+    """One whole FNO block — gelu(spectral(x) + 1×1 bypass + bias) — as a
+    single fused kernel on the pallas path (ops.fno_block_nd), any rank.
+
+    spec_params: {"wr","wi"} from init_spectral_nd; byp_params: {"w","b"}
+    from core.fno._dense_init, where w is [C_in, C_out] (einsum
+    ``bc...,cd->bd...``) — transposed here to the engine's [O,H] layout.
+    """
+    wb = jnp.swapaxes(byp_params["w"], 0, 1)
+    return ops.fno_block_nd(x, spec_params["wr"], spec_params["wi"], wb,
+                            byp_params["b"], tuple(modes), path=path,
+                            variant=variant, policy=policy, **kw)

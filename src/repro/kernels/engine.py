@@ -37,7 +37,15 @@ Three kernel families:
 
   * ``fused_fnond_call``       — full fusion (whole layer, real in/out);
     with adjoint DFT operands and (out,hidden)-swapped weights the same
-    kernel is the backward input-cotangent pipeline.
+    kernel is the backward input-cotangent pipeline. Optional BLOCK
+    EPILOGUE (``wb``/``bias``/``act``): the 1×1 bypass conv of the
+    standard FNO block ``gelu(spectral(h) + bypass(h) + bias)`` contracts
+    the same hidden axis as the CGEMM k-loop, so its GEMM rides the same
+    grid into a third VMEM accumulator and the last-k epilogue applies
+    ``+bypass → +bias → gelu`` before the single ref write — one
+    pallas_call for the whole FNO block. ``act="gelu_vjp"`` is the
+    backward recompute: the epilogue forms ``gz = gy·gelu'(z)`` from the
+    recomputed pre-activation without materializing z in HBM.
   * ``fused_fnond_core_call``  — paper-faithful partial fusion: only the
     DFT stage adjacent to the CGEMM is fused (complex in/out); the outer
     R-1 transforms run as standalone kernels (dft.py), matching TurboFNO,
@@ -45,6 +53,9 @@ Three kernel families:
   * ``fused_fnond_wgrad_call`` — fused rank-reduction weight gradient:
     both the primal spectrum A and the cotangent spectrum Ĝ are computed
     in VMEM and consumed by the reduction without an HBM round trip.
+    ``with_bypass=True`` additionally emits the bypass-weight cotangent
+    ``dW_b = Σ gz·xᵀ`` and ``dbias = Σ gz`` from the x/gz refs the
+    spectral reduction already holds in VMEM — no extra HBM pass.
 """
 from __future__ import annotations
 
@@ -97,25 +108,61 @@ def _dft_chain(z, mats, rank, acc=_F32):
     return zr, zi
 
 
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+_GELU_A = 0.044715
+
+
+def _dgelu(z):
+    """d/dz of the tanh-approximate GELU (jax.nn.gelu approximate=True,
+    the activation core/fno.py applies): with u = c·(z + a·z³),
+    gelu'(z) = ½(1+tanh u) + ½·z·(1−tanh²u)·c·(1+3a·z²)."""
+    z2 = z * z
+    t = jnp.tanh(_GELU_C * z * (1.0 + _GELU_A * z2))
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * _GELU_C * (
+        1.0 + 3.0 * _GELU_A * z2)
+
+
 # ---------------------------------------------------------------------------
-# Full fusion: [rDFT → cDFT… → CGEMM → icDFT… → irDFT] in one kernel
+# Full fusion: [rDFT → cDFT… → CGEMM → icDFT… → irDFT] in one kernel.
+# With the block epilogue (has_wb): the bypass GEMM x·W_bᵀ accumulates in a
+# third VMEM scratch during the same hidden k-loop, and the last-k epilogue
+# computes gelu(iDFT(acc) + bypass + bias) before the single ref write.
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32"):
+def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32",
+                     has_wb: bool = False, has_bias: bool = False,
+                     act: str = "linear"):
     r = rank
     acc = jnp.dtype(acc_dtype)
+    has_gy = act == "gelu_vjp"
 
     def kernel(*refs):
         x_ref, wr_ref, wi_ref = refs[:3]
-        fwd = refs[3:3 + 2 * r]
-        inv = refs[3 + 2 * r:3 + 4 * r]
-        y_ref = refs[3 + 4 * r]
-        accr, acci = refs[4 + 4 * r:]
+        pos = 3
+        fwd = refs[pos:pos + 2 * r]
+        inv = refs[pos + 2 * r:pos + 4 * r]
+        pos += 4 * r
+        wb_ref = bias_ref = gy_ref = accb = None
+        if has_wb:
+            wb_ref = refs[pos]
+            pos += 1
+        if has_bias:
+            bias_ref = refs[pos]
+            pos += 1
+        if has_gy:
+            gy_ref = refs[pos]
+            pos += 1
+        y_ref = refs[pos]
+        accr, acci = refs[pos + 1:pos + 3]
+        if has_wb:
+            accb = refs[pos + 3]
 
         @pl.when(pl.program_id(2) == 0)
         def _init():
             accr[...] = jnp.zeros_like(accr)
             acci[...] = jnp.zeros_like(acci)
+            if has_wb:
+                accb[...] = jnp.zeros_like(accb)
 
         # Truncated forward DFT chain — the FFT writing its A-tile to
         # "shared memory" (VMEM registers).
@@ -138,31 +185,53 @@ def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32"):
         accr[...] += dg(ar, wr) - dg(ai, wi)
         acci[...] += dg(ar, wi) + dg(ai, wr)
 
+        if has_wb:
+            # Bypass GEMM riding the same k-loop MAC: W_b[bo,bh]·x[bb,bh,s…]
+            # → [bo,bb,s…]. The bo-leading layout keeps the minor (spatial)
+            # dims in place so the epilogue's realign is a major-axes swap.
+            accb[...] += jax.lax.dot_general(
+                wb_ref[...], x_ref[...], (((1,), (1,)), ((), ())),
+                preferred_element_type=acc)
+
         @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
         def _epilogue():
             # Padded inverse DFT chain; only the real part of the final
             # stage is materialized (real output).
             tr, ti = accr[...], acci[...]
+            z = None
             for i in range(r):
                 axis = (r - 1 - i) if per_mode else (r - i)
                 mr, mi = inv[2 * i][...], inv[2 * i + 1][...]
                 if i < r - 1:
                     tr, ti = _cstage(tr, ti, mr, mi, axis, acc)
                 else:
-                    y_ref[...] = (_dot(tr, mr, axis, acc)
-                                  - _dot(ti, mi, axis, acc)
-                                  ).astype(y_ref.dtype)
+                    z = (_dot(tr, mr, axis, acc)
+                         - _dot(ti, mi, axis, acc))
+            # Block epilogue: + bypass + bias → activation, all on the
+            # f32 VMEM values — HBM sees only the final activation.
+            if has_wb:
+                z = z + jnp.swapaxes(accb[...], 0, 1)
+            if has_bias:
+                z = z + bias_ref[...].reshape((1, -1) + (1,) * r)
+            if act == "gelu":
+                z = jax.nn.gelu(z, approximate=True)
+            elif act == "gelu_vjp":
+                z = gy_ref[...].astype(acc) * _dgelu(z)
+            y_ref[...] = z.astype(y_ref.dtype)
 
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("bb", "bo", "bh", "interpret",
-                                             "out_dtype", "acc_dtype"))
+                                             "out_dtype", "acc_dtype",
+                                             "act"))
 def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
                      *mats: jax.Array, bb: int, bo: int, bh: int,
                      interpret: bool = False, out_dtype: str = None,
-                     acc_dtype: str = "float32") -> jax.Array:
-    """Whole rank-R FNO spectral layer in one kernel.
+                     acc_dtype: str = "float32", wb: jax.Array = None,
+                     bias: jax.Array = None, gy: jax.Array = None,
+                     act: str = "linear") -> jax.Array:
+    """Whole rank-R FNO spectral layer — or FNO block — in one kernel.
 
     x: [B,H,s_1..s_R] real; w: [O,H] or [O,H,K_1..K_R]; mats: flat
     (mr, mi) operand pairs — R forward stages ([n,k], axis s_R first) then
@@ -174,6 +243,12 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     x.dtype — the backward pass emits dx at the primal dtype straight from
     the f32 accumulator); acc_dtype is the VMEM accumulator dtype
     (PrecisionPolicy.accum_dtype).
+
+    Block epilogue (all optional, see ``fused_fno_block_call``):
+    wb [O,H] accumulates the 1×1 bypass GEMM alongside the CGEMM k-loop;
+    bias [O,1] adds per-out-channel; act picks the epilogue nonlinearity —
+    "linear" (default), "gelu" (forward block), or "gelu_vjp" (backward
+    recompute: requires gy [B,O,s_1..s_R] and emits gy·gelu'(z)).
     """
     r = x.ndim - 2
     b, h = x.shape[:2]
@@ -181,6 +256,8 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     o = wr.shape[0]
     per_mode = wr.ndim == 2 + r
     assert len(mats) == 4 * r, (len(mats), r)
+    assert act in ("linear", "gelu", "gelu_vjp"), act
+    assert (gy is not None) == (act == "gelu_vjp"), act
     # Spectral extents in accumulator order (K_R .. K_1).
     rev_modes = tuple(m.shape[1] for m in mats[:2 * r:2])
     grid = (b // bb, o // bo, h // bh)
@@ -197,19 +274,48 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     m_specs = [pl.BlockSpec(m.shape, lambda i, j, k: (0, 0)) for m in mats]
     y_spec = pl.BlockSpec((bb, bo) + spatial, lambda i, j, k: (i, j) + zr)
 
+    operands = [x, wr, wi, *mats]
+    in_specs = [x_spec, w_spec, w_spec] + m_specs
     acc = jnp.dtype(acc_dtype)
+    scratch = [pltpu.VMEM(acc_shape, acc), pltpu.VMEM(acc_shape, acc)]
+    if wb is not None:
+        operands.append(wb)
+        in_specs.append(pl.BlockSpec((bo, bh), lambda i, j, k: (j, k)))
+        scratch.append(pltpu.VMEM((bo, bb) + spatial, acc))
+    if bias is not None:
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec((bo, 1), lambda i, j, k: (j, 0)))
+    if gy is not None:
+        operands.append(gy)
+        in_specs.append(y_spec)
+
     return pl.pallas_call(
-        _make_fwd_kernel(r, per_mode, acc_dtype),
+        _make_fwd_kernel(r, per_mode, acc_dtype, wb is not None,
+                         bias is not None, act),
         grid=grid,
-        in_specs=[x_spec, w_spec, w_spec] + m_specs,
+        in_specs=in_specs,
         out_specs=y_spec,
         out_shape=jax.ShapeDtypeStruct((b, o) + spatial,
                                        jnp.dtype(out_dtype or x.dtype)),
-        scratch_shapes=[pltpu.VMEM(acc_shape, acc),
-                        pltpu.VMEM(acc_shape, acc)],
+        scratch_shapes=scratch,
         compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
-    )(x, wr, wi, *mats)
+    )(*operands)
+
+
+def fused_fno_block_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                         wb: jax.Array, bias: jax.Array, *mats: jax.Array,
+                         bb: int, bo: int, bh: int, interpret: bool = False,
+                         out_dtype: str = None,
+                         acc_dtype: str = "float32") -> jax.Array:
+    """One whole FNO block — gelu(spectral(x) + x·W_bᵀ + bias) — in a
+    single pallas_call (the paper's fusion thesis extended to the full
+    block). wb: [O,H] bypass 1×1 weight; bias: [O,1]; everything else as
+    ``fused_fnond_call``."""
+    return fused_fnond_call(x, wr, wi, *mats, bb=bb, bo=bo, bh=bh,
+                            interpret=interpret, out_dtype=out_dtype,
+                            acc_dtype=acc_dtype, wb=wb, bias=bias,
+                            act="gelu")
 
 
 # ---------------------------------------------------------------------------
@@ -330,7 +436,8 @@ def fused_fnond_core_call(zr: jax.Array, zi: jax.Array, wr: jax.Array,
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _make_wgrad_kernel(rank: int, per_mode: bool,
-                       acc_dtype: str = "float32"):
+                       acc_dtype: str = "float32",
+                       with_bypass: bool = False):
     r = rank
     acc = jnp.dtype(acc_dtype)
 
@@ -338,13 +445,24 @@ def _make_wgrad_kernel(rank: int, per_mode: bool,
         x_ref, g_ref = refs[:2]
         xm = refs[2:2 + 2 * r]          # forward-spectrum operands (A)
         gm = refs[2 + 2 * r:2 + 4 * r]  # adjoint forward operands (Ĝ)
-        dwr_ref, dwi_ref = refs[2 + 4 * r:4 + 4 * r]
-        accr, acci = refs[4 + 4 * r:]
+        pos = 2 + 4 * r
+        dwr_ref, dwi_ref = refs[pos:pos + 2]
+        pos += 2
+        dwb_ref = db_ref = accwb = accdb = None
+        if with_bypass:
+            dwb_ref, db_ref = refs[pos:pos + 2]
+            pos += 2
+        accr, acci = refs[pos:pos + 2]
+        if with_bypass:
+            accwb, accdb = refs[pos + 2:pos + 4]
 
         @pl.when(pl.program_id(2) == 0)
         def _init():
             accr[...] = jnp.zeros_like(accr)
             acci[...] = jnp.zeros_like(acci)
+            if with_bypass:
+                accwb[...] = jnp.zeros_like(accwb)
+                accdb[...] = jnp.zeros_like(accdb)
 
         ar, ai = _dft_chain(x_ref[...], xm, r, acc)  # A: [bb,bh,K_R..K_1]
         hr, hi = _dft_chain(g_ref[...], gm, r, acc)  # Ĝ: [bb,bo,K_R..K_1]
@@ -363,23 +481,38 @@ def _make_wgrad_kernel(rank: int, per_mode: bool,
         accr[...] += rdot(hr, ar) - rdot(hi, ai)
         acci[...] += rdot(hr, ai) + rdot(hi, ar)
 
+        if with_bypass:
+            # Bypass cotangents from the refs already resident in VMEM:
+            # dW_b = Σ_{b,s} gz·x (contract batch + every spatial axis)
+            # and dbias = Σ_{b,s} gz — no extra HBM pass.
+            sp_axes = (0,) + tuple(range(2, 2 + r))
+            accwb[...] += jax.lax.dot_general(
+                g_ref[...], x_ref[...], ((sp_axes, sp_axes), ((), ())),
+                preferred_element_type=acc)
+            accdb[...] += jnp.sum(g_ref[...].astype(acc),
+                                  axis=sp_axes)[:, None]
+
         @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
         def _epilogue():
             # dW = conj(acc): real part as-is, imaginary part negated.
             dwr_ref[...] = accr[...].astype(dwr_ref.dtype)
             dwi_ref[...] = (-acci[...]).astype(dwi_ref.dtype)
+            if with_bypass:  # real operands — no conjugation
+                dwb_ref[...] = accwb[...].astype(dwb_ref.dtype)
+                db_ref[...] = accdb[...].astype(db_ref.dtype)
 
     return kernel
 
 
 @functools.partial(
     jax.jit, static_argnames=("bb", "bo", "bh", "per_mode", "interpret",
-                              "out_dtype", "acc_dtype"))
+                              "out_dtype", "acc_dtype", "with_bypass"))
 def fused_fnond_wgrad_call(x: jax.Array, g: jax.Array, *mats: jax.Array,
                            bb: int, bo: int, bh: int, per_mode: bool,
                            interpret: bool = False, out_dtype: str = None,
-                           acc_dtype: str = "float32"
-                           ) -> Tuple[jax.Array, jax.Array]:
+                           acc_dtype: str = "float32",
+                           with_bypass: bool = False
+                           ) -> Tuple[jax.Array, ...]:
     """x: [B,H,s_1..s_R] primal; g: [B,O,s_1..s_R] cotangent; mats: flat
     (mr, mi) pairs — R forward stages for x then R adjoint-forward stages
     for g (each [n,k], axis s_R first), as produced by
@@ -389,6 +522,10 @@ def fused_fnond_wgrad_call(x: jax.Array, g: jax.Array, *mats: jax.Array,
     transposes back to [O,H,K_1..K_R]). out_dtype sets the dW emission
     dtype (PrecisionPolicy.param_dtype under mixed precision: cotangents
     accumulate at acc_dtype in VMEM, dW is cast once at the ref write).
+
+    with_bypass=True (the fused-block backward) appends the bypass-GEMM
+    cotangents to the return — (dwr, dwi, dwb [O,H], dbias [O,1]) — formed
+    from the x/g refs the spectral reduction already holds in VMEM.
     """
     r = x.ndim - 2
     b, h = x.shape[:2]
@@ -411,17 +548,28 @@ def fused_fnond_wgrad_call(x: jax.Array, g: jax.Array, *mats: jax.Array,
         dw_spec = pl.BlockSpec((bo, bh), lambda i, j, kb: (i, j))
         dw_shape = (o, h)
         acc_shape = (bo, bh)
-    out_sd = jax.ShapeDtypeStruct(dw_shape, jnp.dtype(out_dtype or x.dtype))
+    od = jnp.dtype(out_dtype or x.dtype)
+    out_sd = jax.ShapeDtypeStruct(dw_shape, od)
 
     acc = jnp.dtype(acc_dtype)
+    out_specs = [dw_spec, dw_spec]
+    out_shape = [out_sd, out_sd]
+    scratch = [pltpu.VMEM(acc_shape, acc), pltpu.VMEM(acc_shape, acc)]
+    if with_bypass:
+        # dwb [O,H] per (i,j) block; dbias [O,1] is j-independent — every
+        # j program re-derives and writes the identical block (idempotent).
+        out_specs += [pl.BlockSpec((bo, bh), lambda i, j, kb: (i, j)),
+                      pl.BlockSpec((bo, 1), lambda i, j, kb: (i, 0))]
+        out_shape += [jax.ShapeDtypeStruct((o, h), od),
+                      jax.ShapeDtypeStruct((o, 1), od)]
+        scratch += [pltpu.VMEM((bo, bh), acc), pltpu.VMEM((bo, 1), acc)]
     return pl.pallas_call(
-        _make_wgrad_kernel(r, per_mode, acc_dtype),
+        _make_wgrad_kernel(r, per_mode, acc_dtype, with_bypass),
         grid=grid,
         in_specs=[x_spec, g_spec] + m_specs,
-        out_specs=[dw_spec, dw_spec],
-        out_shape=[out_sd, out_sd],
-        scratch_shapes=[pltpu.VMEM(acc_shape, acc),
-                        pltpu.VMEM(acc_shape, acc)],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
     )(x, g, *mats)

@@ -5,6 +5,11 @@ The kernel bodies moved to the rank-generic engine
 for every spatial rank — see engine.py's module docstring for the layout
 notes that used to live here. These wrappers pin rank 1 and preserve the
 original positional-operand signatures.
+
+For the WHOLE FNO block — gelu(spectral(x) + 1×1 bypass + bias) in one
+pallas_call, end-to-end differentiable — use the block API instead:
+``engine.fused_fno_block_call`` (raw kernel) or ``ops.fno_block_nd``
+(padded, custom_vjp, rank-generic).
 """
 from __future__ import annotations
 

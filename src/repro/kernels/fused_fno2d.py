@@ -10,6 +10,11 @@ original positional-operand signatures:
 * ``fused_fno2d_full_call`` — beyond-paper full fusion: the entire layer
   [rDFT_Y → cDFT_X → CGEMM → icDFT_X → irDFT_Y] in one kernel.
 * ``fused_fno2d_wgrad_call`` — fused rank-reduction weight gradient.
+
+For the WHOLE FNO block — gelu(spectral(x) + 1×1 bypass + bias) in one
+pallas_call, end-to-end differentiable — use the block API instead:
+``engine.fused_fno_block_call`` (raw kernel) or ``ops.fno_block_nd``
+(padded, custom_vjp, rank-generic).
 """
 from __future__ import annotations
 

@@ -144,31 +144,39 @@ def padded_irdft(xr: jax.Array, xi: jax.Array, n: int, *,
 
 def truncated_cdft(xr: jax.Array, xi: jax.Array, modes: int, *,
                    path: str = "pallas", block_rows: int = 256,
-                   interpret: Optional[bool] = None
+                   interpret: Optional[bool] = None,
+                   operand_dtype: Optional[str] = None
                    ) -> Tuple[jax.Array, jax.Array]:
-    """Complex DFT along the last axis keeping the first `modes` bins."""
+    """Complex DFT along the last axis keeping the first `modes` bins.
+
+    operand_dtype overrides the DFT-matrix dtype (defaults to xr.dtype;
+    PrecisionPolicy.spectral_dtype on the partial-fusion path — the same
+    contract the real-input wrappers above already honor)."""
     if path == "ref":
         return ref_k.ref_truncated_cdft(xr, xi, modes)
     if path == "xla":
         return spectral.truncated_cdft(xr, xi, modes)
-    mats = _dft_operands(spectral.cdft_mats(xr.shape[-1], modes), xr.dtype,
-                         1, _rup(modes, 128))
+    mats = _dft_operands(spectral.cdft_mats(xr.shape[-1], modes),
+                         operand_dtype or xr.dtype, 1, _rup(modes, 128))
     return _rowwise(dft_k._cdft_call, [xr, xi], mats, modes, block_rows,
                     interpret)
 
 
 def padded_icdft(xr: jax.Array, xi: jax.Array, n: int, *,
                  path: str = "pallas", block_rows: int = 256,
-                 interpret: Optional[bool] = None
+                 interpret: Optional[bool] = None,
+                 operand_dtype: Optional[str] = None
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Inverse complex DFT from first-`modes` bins zero-padded to n."""
+    """Inverse complex DFT from first-`modes` bins zero-padded to n.
+
+    operand_dtype: see ``truncated_cdft``."""
     if path == "ref":
         return ref_k.ref_padded_icdft(xr, xi, n)
     if path == "xla":
         return spectral.padded_icdft(xr, xi, n)
     kp = _rup(xr.shape[-1], 128)
     mats = _dft_operands(spectral.cdft_mats(n, xr.shape[-1], True),
-                         xr.dtype, 0, kp)
+                         operand_dtype or xr.dtype, 0, kp)
     return _rowwise(dft_k._cdft_call, [xr, xi], mats, 0, block_rows,
                     interpret, pad_in_to=kp)
 
@@ -231,13 +239,17 @@ def _default_policy(x, wr) -> PrecisionPolicy:
 
 
 def _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol,
-                 adjoint: bool = False, out_dtype: str = None):
+                 adjoint: bool = False, out_dtype: str = None,
+                 wb=None, bias=None, gy=None, act: str = "linear"):
     """Pad to block multiples and invoke the rank-generic fused kernel.
 
     adjoint=True runs the input-cotangent pipeline: transposed DFT
     operands; the caller passes (out, hidden)-swapped weights. out_dtype
     overrides the emission dtype (backward emits dx at the primal dtype
-    straight from the accumulator).
+    straight from the accumulator). wb [O,H] / bias [O] / act extend the
+    kernel with the block epilogue (bypass GEMM riding the k-loop,
+    +bias → activation at the ref write); gy feeds the "gelu_vjp"
+    backward-recompute epilogue.
     """
     r = len(modes)
     b, h = x.shape[:2]
@@ -255,10 +267,14 @@ def _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol,
             w = _pad_axis(w, 2, kp)
         return _pad_axis(_pad_axis(w, 0, op_), 1, hp)
 
+    wbp = None if wb is None else _pad_axis(_pad_axis(wb, 0, op_), 1, hp)
+    biasp = None if bias is None else _pad_axis(bias[:, None], 0, op_)
+    gyp = None if gy is None else _pad_axis(_pad_axis(gy, 0, bp), 1, op_)
     y = engine.fused_fnond_call(xpad, wpad(wr), wpad(wi), *mats,
                                 bb=bb, bo=bo, bh=bh, interpret=interpret,
                                 out_dtype=out_dtype,
-                                acc_dtype=pol.accum_dtype)
+                                acc_dtype=pol.accum_dtype,
+                                wb=wbp, bias=biasp, gy=gyp, act=act)
     return y[:b, :o]
 
 
@@ -361,9 +377,11 @@ def _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret, pol):
 
 
 def _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode, pol,
-                 out_dtype: str = None):
+                 out_dtype: str = None, with_bypass: bool = False):
     """Fused weight cotangent: conj(Σ_b Ĝ·A) rank reduction; dW emitted at
-    out_dtype (the param dtype under mixed precision)."""
+    out_dtype (the param dtype under mixed precision). with_bypass=True
+    (fused-block backward) appends (dwb [O,H], dbias [O]) from the same
+    kernel."""
     r = len(modes)
     b, h = x.shape[:2]
     o = gy.shape[1]
@@ -373,15 +391,18 @@ def _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode, pol,
         tuple(x.shape[2:]), _modes_key(modes), pol.spectral_dtype, kp)
     xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
     gpad = _pad_axis(_pad_axis(gy, 0, bp), 1, op_)
-    dwr, dwi = engine.fused_fnond_wgrad_call(
+    out = engine.fused_fnond_wgrad_call(
         xpad, gpad, *mats, bb=bb, bo=bo, bh=bh, per_mode=per_mode,
         interpret=interpret, out_dtype=out_dtype,
-        acc_dtype=pol.accum_dtype)
+        acc_dtype=pol.accum_dtype, with_bypass=with_bypass)
+    dwr, dwi = out[:2]
+    extra = (out[2][:o, :h], out[3][:o, 0]) if with_bypass else ()
     if per_mode:  # kernel emits [K_R..K_1,O,H] -> [O,H,K_1..K_R]
         perm = (r, r + 1) + tuple(range(r - 1, -1, -1))
         sl = (slice(o), slice(h)) + tuple(slice(m) for m in modes)
-        return jnp.transpose(dwr, perm)[sl], jnp.transpose(dwi, perm)[sl]
-    return dwr[:o, :h], dwi[:o, :h]
+        return (jnp.transpose(dwr, perm)[sl],
+                jnp.transpose(dwi, perm)[sl]) + extra
+    return (dwr[:o, :h], dwi[:o, :h]) + extra
 
 
 def _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret,
@@ -463,9 +484,21 @@ def _fnond_xla(x, wr, wi, modes, pol=None):
     return y.astype(x.dtype) if pol is not None else y
 
 
+# Per-rank (bb, bo, bh) kernel block-size defaults — the ONE source of
+# truth for both the spectral layers and the fused block (0 in a public
+# signature means "use this table").
+_BLOCK_DEFAULTS = {1: (8, 128, 128), 2: (2, 128, 32), 3: (1, 128, 16)}
+
+
+def _resolve_blocks(rank, bb, bo, bh):
+    dbb, dbo, dbh = _BLOCK_DEFAULTS[rank]
+    return bb or dbb, bo or dbo, bh or dbh
+
+
 def _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
                        interpret, policy=None):
     modes = _modes_key(modes)
+    bb, bo, bh = _resolve_blocks(len(modes), bb, bo, bh)
     if path == "ref":
         if policy is not None:  # oracle runs in f32, emits at compute dtype
             y32 = ref_k.ref_fnond(x.astype(jnp.float32),
@@ -482,7 +515,7 @@ def _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
 
 def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: int, *, path: str = "pallas",
-                      bb: int = 8, bo: int = 128, bh: int = 128,
+                      bb: int = 0, bo: int = 0, bh: int = 0,
                       interpret: Optional[bool] = None,
                       policy: Optional[PrecisionPolicy] = None) -> jax.Array:
     """Full 1D FNO spectral layer. x: [B,H,N]; w: [O,H] or [O,H,modes].
@@ -490,7 +523,8 @@ def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
     path="pallas" is differentiable: jax.grad routes through the fused
     backward kernels (custom_vjp), never falling back to XLA. policy sets
     the mixed-precision contract (bf16 kernel I/O with f32 accumulators);
-    None infers a uniform policy from the operand dtypes.
+    None infers a uniform policy from the operand dtypes. bb/bo/bh=0
+    selects the per-rank defaults (``_BLOCK_DEFAULTS``).
     """
     return _spectral_layer_nd(x, wr, wi, (modes,), path, "full", bb, bo, bh,
                               interpret, policy)
@@ -498,8 +532,8 @@ def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
 
 def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: Tuple[int, int], *, path: str = "pallas",
-                      variant: str = "full", bb: int = 2, bo: int = 128,
-                      bh: int = 32,
+                      variant: str = "full", bb: int = 0, bo: int = 0,
+                      bh: int = 0,
                       interpret: Optional[bool] = None,
                       policy: Optional[PrecisionPolicy] = None) -> jax.Array:
     """Full 2D FNO spectral layer, TurboFNO truncation convention.
@@ -516,8 +550,8 @@ def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
 
 def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: Tuple[int, int, int], *, path: str = "pallas",
-                      variant: str = "full", bb: int = 1, bo: int = 128,
-                      bh: int = 16,
+                      variant: str = "full", bb: int = 0, bo: int = 0,
+                      bh: int = 0,
                       interpret: Optional[bool] = None,
                       policy: Optional[PrecisionPolicy] = None) -> jax.Array:
     """Full 3D FNO spectral layer (Navier–Stokes-class workloads).
@@ -531,3 +565,133 @@ def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
     """
     return _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
                               interpret, policy)
+
+
+# ---------------------------------------------------------------------------
+# Fused FNO BLOCK (beyond the spectral layer): the standard FNO block
+# y = gelu(spectral(x) + bypass(x) + bias) (Li et al. 2020) in ONE
+# pallas_call on the full-fusion path. The 1×1 bypass conv contracts the
+# same hidden axis as the engine's CGEMM k-loop, so it rides the existing
+# grid into a third VMEM accumulator and +bias → +spectral → gelu happen
+# in the iDFT epilogue — the per-layer XLA ops (bypass GEMM, bias, sum,
+# GELU) and their ~4 HBM round trips on B·H·∏s tensors disappear.
+#
+# End-to-end differentiable via its own custom_vjp:
+#   * gz: one fused kernel recomputes the pre-activation z through the
+#     same forward pipeline and emits gz = gy·gelu'(z) (act="gelu_vjp") —
+#     z never touches HBM;
+#   * dx = spectral_adjoint(gz) + gz·W_b: the SAME block kernel with
+#     adjoint DFT operands, (out,hidden)-swapped spectral weight, and the
+#     transposed bypass riding the k-loop;
+#   * dW, dW_b, dbias: the extended wgrad kernel (with_bypass=True) emits
+#     all three from the refs it already holds in VMEM.
+# The backward always runs the fully fused pipeline — partial and full
+# compute the same function, so one adjoint serves both variants.
+# ---------------------------------------------------------------------------
+def _block_tail(s, x, wb, bias, out_dtype):
+    """The staged block epilogue — XLA bypass GEMM + bias + GELU on a
+    spectral output s. Shared by the oracle paths AND the partial-variant
+    pallas path so the parity target and the implementation can never
+    diverge: z accumulates in f32, the single down-cast is the return."""
+    byp = jnp.einsum("oh,bh...->bo...", wb.astype(x.dtype), x,
+                     preferred_element_type=jnp.float32)
+    z = (s.astype(jnp.float32) + byp
+         + bias.astype(jnp.float32).reshape((1, -1) + (1,) * (x.ndim - 2)))
+    return jax.nn.gelu(z).astype(out_dtype)
+
+
+def _fno_block_oracle(x, wr, wi, wb, bias, modes, path, pol):
+    """Staged parity oracle: spectral layer (ref/xla path) + XLA bypass +
+    bias + GELU — the exact math the one-kernel pallas path fuses."""
+    s = _spectral_layer_nd(x, wr, wi, modes, path, "full", 0, 0, 0,
+                           None, pol)
+    cp = jnp.dtype(pol.compute_dtype) if pol is not None else x.dtype
+    return _block_tail(s, x.astype(cp), wb, bias, s.dtype)
+
+
+def _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+                    interpret, pol):
+    # Same cast contract as the spectral layer: compute-dtype casts live
+    # inside the custom_vjp so the caller's primal/cotangent dtypes are
+    # preserved (PrecisionPolicy — ROADMAP.md §Precision policy).
+    cp = jnp.dtype(pol.compute_dtype)
+    x, wr, wi, wb, bias = (a.astype(cp) for a in (x, wr, wi, wb, bias))
+    if variant == "full":
+        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol,
+                            wb=wb, bias=bias, act="gelu")
+    # Paper-faithful partial fusion keeps the multi-kernel spectral
+    # pipeline; the block tail (bypass+bias+gelu) runs as XLA ops. The
+    # BACKWARD still uses the fully fused adjoint (one linear map).
+    s = _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret, pol)
+    return _block_tail(s, x, wb, bias, cp)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
+def _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+                         interpret, pol):
+    return _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+                           interpret, pol)
+
+
+def _fno_block_vjp_fwd(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+                       interpret, pol):
+    y = _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+                        interpret, pol)
+    return y, (x, wr, wi, wb, bias)
+
+
+def _fno_block_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, res, gy):
+    x, wr, wi, wb, bias = res
+    cp = jnp.dtype(pol.compute_dtype)
+    xc, wrc, wic, wbc, biasc = (a.astype(cp) for a in (x, wr, wi, wb, bias))
+    gyc = gy.astype(cp)
+    # (1) recompute the pre-activation through the fused forward and form
+    # gz = gy·gelu'(z) in the epilogue — z never materializes in HBM.
+    gz = _fnond_fused(xc, wrc, wic, modes, bb, bo, bh, interpret, pol,
+                     wb=wbc, bias=biasc, gy=gyc, act="gelu_vjp")
+    # (2) dx = spectral_adjoint(gz) + gz·W_b: the same block kernel with
+    # adjoint operands, swapped spectral weight, transposed bypass, linear
+    # epilogue; dx emitted at the primal dtype from the f32 accumulator.
+    dx = _fnond_fused(gz, jnp.swapaxes(wrc, 0, 1), jnp.swapaxes(wic, 0, 1),
+                      modes, bb, bo, bh, interpret, pol, adjoint=True,
+                      out_dtype=jnp.dtype(x.dtype).name,
+                      wb=jnp.swapaxes(wbc, 0, 1))
+    # (3) dW, dW_b, dbias from ONE extended wgrad kernel, emitted at the
+    # param dtype straight from the f32 accumulators.
+    dwr, dwi, dwb, db = _fnond_wgrad(
+        xc, gz, modes, bb, bo, bh, interpret,
+        per_mode=wr.ndim == 2 + len(modes), pol=pol,
+        out_dtype=jnp.dtype(wr.dtype).name, with_bypass=True)
+    return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype),
+            dwb.astype(wb.dtype), db.astype(bias.dtype))
+
+
+_fno_block_nd_pallas.defvjp(_fno_block_vjp_fwd, _fno_block_vjp_bwd)
+
+
+def fno_block_nd(x: jax.Array, wr: jax.Array, wi: jax.Array, wb: jax.Array,
+                 bias: jax.Array, modes: Sequence[int], *,
+                 path: str = "pallas", variant: str = "full",
+                 bb: int = 0, bo: int = 0, bh: int = 0,
+                 interpret: Optional[bool] = None,
+                 policy: Optional[PrecisionPolicy] = None) -> jax.Array:
+    """One whole FNO block: y = gelu(spectral(x) + x·W_bᵀ + bias).
+
+    x: [B,H,s_1..s_R]; wr/wi: [O,H] or [O,H,k_1..k_R] spectral weight;
+    wb: [O,H] bypass 1×1 conv (y_o += Σ_h x_h·wb[o,h]); bias: [O].
+
+    path="pallas" + variant="full" lowers the ENTIRE block to one
+    pallas_call, and jax.grad stays on fused kernels for all four
+    cotangents (dx, dW, dW_b, dbias) via custom_vjp. variant="partial"
+    keeps the paper-faithful multi-kernel spectral pipeline (XLA block
+    tail) but shares the same fused backward. path="ref"/"xla" are the
+    staged parity oracles. Block sizes default per rank
+    (``_BLOCK_DEFAULTS``); policy: see spectral_layer_1d.
+    """
+    modes = _modes_key(modes)
+    bb, bo, bh = _resolve_blocks(len(modes), bb, bo, bh)
+    if path in ("ref", "xla"):
+        return _fno_block_oracle(x, wr, wi, wb, bias, modes, path, policy)
+    pol = policy or _default_policy(x, wr)
+    return _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, bb, bo,
+                                bh, _interpret(interpret), pol)

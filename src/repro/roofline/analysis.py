@@ -205,7 +205,11 @@ def fno_model_flops(cfg, batch: int) -> float:
     spectral += stage(o, r - 1, True)  # irDFT along s_R (real output)
     if cfg.weight_mode == "per_mode":
         pass  # CGEMM term identical per mode (already counted per-mode)
-    per_layer = spectral + 2 * sp * h * o  # + bypass 1x1
+    # Whole FNO block = spectral + bypass 1x1 GEMM + pointwise epilogue
+    # (bias add + residual add + tanh-GELU ≈ 10 flops/elt). Fusion
+    # (cfg.fuse_block) moves these into the kernel's k-loop/epilogue but
+    # does not change the FLOP count — only the byte model below does.
+    per_layer = spectral + 2 * sp * h * o + 12 * sp * o
     lifting = 2 * sp * (cfg.in_channels * lift + lift * h)
     proj = 2 * sp * (h * lift + lift * cfg.out_channels)
     fwd = batch * (cfg.num_layers * per_layer + lifting + proj)
@@ -213,7 +217,8 @@ def fno_model_flops(cfg, batch: int) -> float:
 
 
 def fno_model_bytes(cfg, batch: int, *, variant: str = "full",
-                    training: bool = True) -> float:
+                    training: bool = True,
+                    fuse_block: bool = None) -> float:
     """Dtype-aware HBM-traffic model of one FNO step (the memory side of
     the roofline — TurboFNO's whole argument is that this term binds).
 
@@ -232,18 +237,28 @@ def fno_model_bytes(cfg, batch: int, *, variant: str = "full",
     and the fused wgrad (re-reads x and gy, writes dW at the param dtype),
     plus the f32 master AdamW update (read params + 2 moments, write all
     three, read grads).
+
+    fuse_block (default: cfg.fuse_block) models the whole-block fusion on
+    the full-fusion path: spectral + bypass + bias + GELU in one kernel,
+    so the spectral-y / bypass-y / sum / activation intermediates (~4 HBM
+    round trips on B·H·∏s tensors per layer, forward alone) never move;
+    training keeps three fused kernels (gz recompute, dx adjoint, extended
+    wgrad emitting dW + dW_b + dbias in one pass).
     """
     import math
     pol = cfg.precision
     cb = dtype_bytes(pol.compute_dtype)
     pb = dtype_bytes(pol.param_dtype)
     sb = dtype_bytes(pol.spectral_dtype)
+    if fuse_block is None:
+        fuse_block = getattr(cfg, "fuse_block", False)
     h = o = cfg.hidden
     sp = math.prod(cfg.spatial)
     lift = cfg.lifting_dim or 2 * h
     act = batch * h * sp  # one hidden activation tensor (elements)
     wmul = math.prod(cfg.modes) if cfg.weight_mode == "per_mode" else 1
     wc = 2 * h * o * wmul  # complex spectral weight (re+im)
+    byp_w = h * o + o  # bypass 1x1 weight + bias
     mats = 4 * sum(n * k for n, k in zip(cfg.spatial, cfg.modes))
 
     spectral_fwd = (act + wc + act) * cb + mats * sb
@@ -251,11 +266,31 @@ def fno_model_bytes(cfg, batch: int, *, variant: str = "full",
         kout = math.prod(cfg.modes[1:])
         inter = 2 * batch * (h + o) * cfg.spatial[0] * kout  # complex pairs
         spectral_fwd += 2 * inter * cb  # write + re-read between launches
-    bypass = (2 * act + h * o) * cb
-    per_layer = spectral_fwd + bypass
-    if training:
-        wgrad = 2 * act * cb + wc * pb
-        per_layer += spectral_fwd + wgrad + (2 * act + h * o) * cb
+
+    if fuse_block and variant == "full":
+        # ONE kernel per block: read x, spectral W, W_b + bias; write the
+        # activated output once. Intermediates live only in VMEM.
+        per_layer = (2 * act + wc + byp_w) * cb + mats * sb
+        if training:
+            # gz recompute (reads x, gy, all weights; writes gz) + dx
+            # adjoint (reads gz, weights; writes dx) + ONE extended wgrad
+            # (reads x, gz; writes dW, dW_b, dbias at the param dtype).
+            per_layer += (3 * act + wc + byp_w) * cb + mats * sb
+            per_layer += (2 * act + wc + h * o) * cb + mats * sb
+            per_layer += 2 * act * cb + (wc + byp_w) * pb
+    else:
+        # Staged block: spectral kernel + bypass GEMM (read x, W_b + bias,
+        # write y_b) + sum (read s, y_b; write z) + GELU (read z, write h).
+        per_layer = (spectral_fwd + (2 * act + byp_w) * cb
+                     + 3 * act * cb + 2 * act * cb)
+        if training:
+            # adjoint spectral + spectral wgrad + GELU vjp (read gy, z;
+            # write gz) + bypass dx (read gz, W_b; write) + dW_b/dbias
+            # (re-read gz, x; emit at param dtype) + cotangent sum.
+            per_layer += spectral_fwd + 2 * act * cb + wc * pb
+            per_layer += 3 * act * cb
+            per_layer += (2 * act + h * o) * cb
+            per_layer += 2 * act * cb + byp_w * pb
 
     io = batch * sp * (cfg.in_channels + cfg.out_channels) * cb
     lift_proj = (2 * batch * sp * (2 * lift + h)

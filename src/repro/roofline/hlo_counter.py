@@ -268,3 +268,50 @@ def count(hlo_text: str) -> Counts:
     if "__entry__" not in comps:
         return Counts()
     return _analyze(comps["__entry__"], comps, {}, False)
+
+
+# ---------------------------------------------------------------------------
+# Trace-level (jaxpr) primitive counting. Interpret-mode pallas_calls lower
+# to plain HLO ops, so the kernel-launch regression guard ("one FNO block ==
+# one pallas_call", scripts/fused_block_smoke.py) must count at the jaxpr
+# level, recursing through pjit / custom_vjp / scan sub-jaxprs. Duck-typed
+# (hasattr) rather than imported so it survives the jax.core →
+# jax.extend.core migration (ROADMAP.md §JAX version compat).
+# ---------------------------------------------------------------------------
+def _jaxpr_prim_counts(jaxpr, out, into_kernels) -> None:
+    for eqn in jaxpr.eqns:
+        out[eqn.primitive.name] = out.get(eqn.primitive.name, 0) + 1
+        if eqn.primitive.name == "pallas_call" and not into_kernels:
+            continue
+        for v in eqn.params.values():
+            _sub_counts(v, out, into_kernels)
+
+
+def _sub_counts(v, out, into_kernels) -> None:
+    if hasattr(v, "jaxpr") and hasattr(v, "consts"):  # ClosedJaxpr
+        _jaxpr_prim_counts(v.jaxpr, out, into_kernels)
+    elif hasattr(v, "eqns"):  # Jaxpr
+        _jaxpr_prim_counts(v, out, into_kernels)
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            _sub_counts(x, out, into_kernels)
+
+
+def jaxpr_primitive_counts(fn, *args, into_kernels: bool = True,
+                           **kwargs) -> Dict[str, int]:
+    """{primitive name: count} over the full jaxpr of fn(*args), including
+    every nested sub-jaxpr (pjit bodies, custom_vjp branches, scans).
+    into_kernels=False stops at pallas_call boundaries — the remaining
+    count is the LAUNCH-level op count (each pallas_call is one entry, its
+    kernel body is not expanded), the fusion claim's "kernel calls"."""
+    import jax
+    counts: Dict[str, int] = {}
+    _jaxpr_prim_counts(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr, counts,
+                       into_kernels)
+    return counts
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of pallas_call primitives fn(*args) traces to — the
+    kernel-launch count of the fused path, robust to interpret mode."""
+    return jaxpr_primitive_counts(fn, *args, **kwargs).get("pallas_call", 0)

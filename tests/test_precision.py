@@ -123,6 +123,44 @@ def test_bf16_permode_wgrad_dtype_and_parity():
         _allclose_rel(a, b, **TOL_BF16_GRAD)
 
 
+@pytest.mark.parametrize("rank", [1, 2, 3])
+@pytest.mark.parametrize("variant", ["full", "partial"])
+def test_bf16_fused_block_forward_and_grads(rank, variant):
+    """The fused FNO block under the bf16 policy: forward within 2e-2 of
+    the f32 XLA oracle, all four cotangents within 5e-2, and the emission
+    dtypes honor the cast contract — y at the compute dtype, dx at the
+    primal x dtype, dW/dW_b/dbias at the (f32 master) param dtype."""
+    if rank == 1 and variant == "partial":
+        pytest.skip("rank 1 has no partial variant")
+    spatial, modes = _CASES[rank]
+    rng = np.random.default_rng(rank * 13)
+    x = _mk(rng, 2, 8, *spatial)
+    wr = _mk(rng, 6, 8, scale=1.0 / 8)
+    wi = _mk(rng, 6, 8, scale=1.0 / 8)
+    wb = _mk(rng, 6, 8, scale=1.0 / 8)
+    bias = _mk(rng, 6, scale=0.3)
+
+    def block(path, policy=None):
+        kw = {"policy": policy} if policy is not None else {}
+        return lambda *a: ops.fno_block_nd(
+            *a, modes, path=path,
+            variant=variant if path == "pallas" else "full", **kw)
+
+    y = block("pallas", BF16)(x, wr, wi, wb, bias)
+    assert y.dtype == jnp.bfloat16
+    _allclose_rel(y, block("xla")(x, wr, wi, wb, bias), **TOL_BF16)
+
+    def grads(fn):
+        loss = lambda *a: jnp.sum(jnp.sin(fn(*a).astype(jnp.float32)))
+        return jax.grad(loss, argnums=(0, 1, 2, 3, 4))(x, wr, wi, wb, bias)
+
+    gp = grads(block("pallas", BF16))
+    gx = grads(block("xla"))
+    for name, a, b in zip(("dx", "dwr", "dwi", "dwb", "dbias"), gp, gx):
+        assert a.dtype == jnp.float32, name  # primal / master-param dtype
+        _allclose_rel(a, b, err_msg=name, **TOL_BF16_GRAD)
+
+
 def test_policy_presets():
     f32 = PrecisionPolicy.from_name("f32")
     assert f32 == PrecisionPolicy.from_name("float32") == PrecisionPolicy()
@@ -257,6 +295,16 @@ def test_fno_model_bytes_predicts_bf16_reduction():
     # partial fusion moves strictly more bytes than full fusion
     assert fno_model_bytes(cfg, 4, variant="partial") > fno_model_bytes(
         cfg, 4, variant="full")
+    # whole-block fusion (PR 4) strictly reduces modeled traffic again —
+    # the spectral-y / bypass-y / sum / GELU round trips disappear
+    for training in (True, False):
+        assert fno_model_bytes(cfg, 4, fuse_block=True,
+                               training=training) < fno_model_bytes(
+            cfg, 4, fuse_block=False, training=training), training
+    # and cfg.fuse_block is the default source of the flag
+    from repro.configs.fno import with_fuse_block
+    assert fno_model_bytes(with_fuse_block(cfg), 4) == fno_model_bytes(
+        cfg, 4, fuse_block=True)
 
 
 def test_grad_acc_dtype_follows_policy():
