@@ -5,7 +5,12 @@ paper reports avg 44% (1D) / 67% (2D), max 150-250%.
 Plus the PR-4 fused-BLOCK row pair: one whole FNO block
 gelu(spectral + bypass + bias) unfused (fused spectral kernel + XLA tail)
 vs fully fused (ONE pallas_call) — wall time, modeled HBM bytes, and
-kernel-call count (pallas_calls + total traced primitives)."""
+kernel-call count (pallas_calls + total traced primitives).
+
+Plus the PR-5 SERVING row pair: the batched FNO serve step (fused vs
+unfused block) on a DP×TP mesh over the local devices — throughput in
+samples/s. Row schema and the committed BENCH_*.json baselines are
+documented in benchmarks/README.md."""
 from __future__ import annotations
 
 import functools
@@ -102,6 +107,7 @@ def run(quick: bool = False):
         f"avg_speedup={np.mean(speedups2):.2f}x max={np.max(speedups2):.2f}x")
 
     run_block(quick)
+    run_serve(quick)
 
 
 def run_block(quick: bool = False):
@@ -164,6 +170,47 @@ def run_block(quick: bool = False):
     row("block2d_fusion_gain", times["fused"],
         f"bytes_ratio={bts['fused'] / bts['unfused']:.3f}x "
         f"speedup={times['unfused'] / times['fused']:.2f}x")
+
+
+def run_serve(quick: bool = False):
+    """FNO serving throughput row pair (ISSUE 5): the batched serve step
+    with the whole-block fusion on vs off, placed DP×TP over the local
+    devices (DP shards the request batch, TP the hidden k-loop axis when
+    it divides — docs/DESIGN.md §6). derived = samples/s + the mesh grid;
+    off-TPU the pallas kernels run in interpret mode, so the ratio
+    validates the serving harness rather than claiming TPU speedup (see
+    run_block's byte model for the fusion claim)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import fno as fno_mod
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_compat_mesh
+    from repro.launch.serve_fno import _pick_tp
+    from repro.train import serve_fno_step as sfs
+
+    print("# bench_e2e serving rows: name,us_per_call,derived")
+    n_dev = jax.device_count()
+    cfg0 = get_config("fno2d", reduced=True)
+    tp = _pick_tp(n_dev, cfg0.hidden)  # the serving driver's own auto-pick
+    dp = n_dev // tp
+    mesh = make_compat_mesh((dp, tp), ("data", "model"))
+    b = 4 if quick else 8
+    x = jnp.asarray(np.random.default_rng(2).normal(
+        size=(b, cfg0.in_channels) + tuple(cfg0.spatial)), jnp.float32)
+
+    times = {}
+    for name, fuse in (("unfused", False), ("fused", True)):
+        cfg = dataclasses.replace(cfg0, path="pallas", fuse_block=fuse)
+        ctx = shd.make_context(cfg, mesh, kind="serve")
+        params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
+        # one full-bucket request per call — the server's own jit cache
+        server = sfs.FNOServer(cfg, params, ctx=ctx, max_batch=b)
+        times[name] = time_fn(server, x, iters=5)
+        row(f"serve2d_{name}_dp{dp}tp{tp}", times[name],
+            f"samples_per_s={b / (times[name] * 1e-6):.1f}")
+    row("serve2d_fusion_gain", times["fused"],
+        f"speedup={times['unfused'] / times['fused']:.2f}x grid=dp{dp}xtp{tp}")
 
 
 if __name__ == "__main__":

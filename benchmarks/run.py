@@ -18,7 +18,7 @@ def main() -> None:
                     help="small sweeps (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: prune,kernels,fft_opt,"
-                         "fusion,e2e,train")
+                         "fusion,e2e,serve,train")
     ap.add_argument("--ranks", default="1,2,3",
                     help="spatial ranks for the train rank sweep "
                          "(e.g. --ranks 3 tracks only the 3D path)")
@@ -39,9 +39,13 @@ def main() -> None:
         "fft_opt": lambda: bench_fft_opt.run(args.quick),
         "fusion": lambda: bench_fusion.run(args.quick),
         "e2e": lambda: bench_e2e.run(args.quick),
+        "serve": lambda: bench_e2e.run_serve(args.quick),
         "train": lambda: bench_train.run(args.quick, ranks=ranks),
     }
-    only = args.only.split(",") if args.only else list(table)
+    # "e2e" already includes the serving rows; don't run them twice on a
+    # full sweep.
+    only = args.only.split(",") if args.only else \
+        [k for k in table if k != "serve"]
     for name in only:
         table[name]()
         print()

@@ -9,6 +9,11 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # pallas path must stay exactly ONE pallas_call (and its grad exactly
 # four). Pure tracing — runs in a couple of seconds, no kernels execute.
 python scripts/fused_block_smoke.py
+# FNO serving smoke (ISSUE 5): the batched serve driver on the fused
+# pallas path, one bucket — asserts one pallas_call per layer through the
+# sharded dispatch and that every served output is finite.
+python -m repro.launch.serve --arch fno2d --reduced --requests 2 \
+  --max-batch 2
 # Collection gate: when pytest selection args (-k/-m/paths) could deselect
 # a broken module, a full collect-only pass must still fail the script on
 # any collection error. A bare run needs no gate — pytest itself exits

@@ -2,7 +2,7 @@
 
 ``get_config("qwen2-1.5b")`` → full ModelConfig; ``get_config(id, reduced=True)``
 → CPU-smoke-sized variant of the same family. ``runnable_cells()`` enumerates
-the (arch × shape) dry-run cells together with skip reasons (DESIGN.md §5).
+the (arch × shape) dry-run cells together with skip reasons (docs/DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -63,7 +63,9 @@ def skip_reason(arch: str, shape: str) -> Optional[str]:
     """Why an (arch × shape) cell is skipped, or None if runnable."""
     cfg = get_config(arch)
     if isinstance(cfg, FNOConfig):
-        return None if shape == "train_4k" else "FNO uses its own shape grid"
+        if shape in ("train_4k", "prefill_32k"):
+            return None  # train cell / batched serving cell (ISSUE 5)
+        return "FNO is a batch workload: no autoregressive decode shapes"
     if shape in ("decode_32k", "long_500k") and not cfg.is_decoder:
         return "encoder-only: no autoregressive decode step"
     if shape == "long_500k" and not cfg.sub_quadratic:

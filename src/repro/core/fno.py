@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FNOConfig
 from repro.core import spectral_conv as sc
+from repro.distributed.sharding import shard_activation
 
 
 def _dense_init(key, din, dout, dtype=jnp.float32):
@@ -80,11 +81,18 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
 
     Runs at cfg.precision.compute_dtype (the single activation cast lives
     here; the spectral kernels receive the policy and keep their f32
-    accumulators)."""
+    accumulators).
+
+    Inside a ``sharding_context`` the ``shard_activation`` calls pin the
+    layer boundaries to the DP/TP layout (batch over the data axes, hidden
+    over the model axis — docs/DESIGN.md §6); the fused blocks themselves
+    dispatch through the shard_map wrapper in ``spectral_conv``."""
     path = path or cfg.path
     pol = cfg.precision
-    x = x.astype(jnp.dtype(pol.compute_dtype))
-    h = _dense(params["lift2"], jax.nn.gelu(_dense(params["lift1"], x)))
+    x = shard_activation(x.astype(jnp.dtype(pol.compute_dtype)), "fno")
+    h = jax.nn.gelu(_dense(params["lift1"], x))
+    h = _dense(params["lift2"], shard_activation(h, "fno_lift"))
+    h = shard_activation(h, "fno_hidden")
     # Whole-block fusion (cfg.fuse_block, pallas path only): spectral +
     # bypass + bias + GELU collapse into ONE pallas_call per layer — the
     # bypass GEMM rides the engine's hidden k-loop and the activation is
@@ -96,6 +104,7 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
             h = sc.apply_fno_block_nd(blk["spectral"], blk["bypass"], h,
                                       tuple(cfg.modes), path=path,
                                       variant=variant, policy=pol)
+            h = shard_activation(h, "fno_hidden")
             continue
         if cfg.ndim == 1:
             s = sc.apply_spectral_1d(blk["spectral"], h, cfg.modes[0],
@@ -107,7 +116,9 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
             s = sc.apply_spectral_3d(blk["spectral"], h, tuple(cfg.modes),
                                      path=path, variant=variant, policy=pol)
         h = jax.nn.gelu(s.astype(h.dtype) + _dense(blk["bypass"], h))
-    return _dense(params["proj2"], jax.nn.gelu(_dense(params["proj1"], h)))
+        h = shard_activation(h, "fno_hidden")
+    out = _dense(params["proj2"], jax.nn.gelu(_dense(params["proj1"], h)))
+    return shard_activation(out, "fno")
 
 
 def relative_l2(pred: jax.Array, target: jax.Array) -> jax.Array:

@@ -1,7 +1,7 @@
 """Spectral-transform algebra: truncated DFTs as MXU-friendly matmuls.
 
 TurboFNO's GPU kernels prune FFT butterflies whose outputs land in discarded
-frequency bands. The TPU-native equivalent (DESIGN.md §3.2) computes the
+frequency bands. The TPU-native equivalent (docs/DESIGN.md §3.2) computes the
 truncated transform as a dense matmul with only the *kept* rows of the DFT
 matrix — pruning becomes row selection, truncation/zero-padding become the
 matrix shapes, and everything runs on the MXU.
@@ -68,7 +68,7 @@ def cdft_mats(n: int, modes: int, inverse: bool = False,
     NOTE (paper-faithful): TurboFNO keeps only the FIRST dimX fraction of the
     complex axis — positive low frequencies only, no hermitian pair. The
     truncate→pad→inverse round trip is therefore a projection, not identity
-    (classic FNO keeps ± corners instead; see DESIGN.md §3.4).
+    (classic FNO keeps ± corners instead; see docs/DESIGN.md §3.4).
     """
     if not inverse:
         k = np.arange(n)[:, None]

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PrecisionPolicy
+from repro.distributed import sharding as shd
 from repro.kernels import ops
 
 
@@ -91,8 +92,19 @@ def apply_fno_block_nd(spec_params: Dict[str, jax.Array],
     spec_params: {"wr","wi"} from init_spectral_nd; byp_params: {"w","b"}
     from core.fno._dense_init, where w is [C_in, C_out] (einsum
     ``bc...,cd->bd...``) — transposed here to the engine's [O,H] layout.
+
+    Inside a multi-device ``sharding_context`` the block dispatches through
+    ``ops.fno_block_nd_sharded``: DP over the context's batch axes, TP over
+    its model axis — the engine's k-loop hidden contraction — with the TP
+    partial pre-activations psum-reduced per layer (docs/DESIGN.md §6).
     """
     wb = jnp.swapaxes(byp_params["w"], 0, 1)
+    ctx = shd.current_context()
+    if path == "pallas" and ctx is not None and ctx.mesh.devices.size > 1:
+        return ops.fno_block_nd_sharded(
+            x, spec_params["wr"], spec_params["wi"], wb, byp_params["b"],
+            tuple(modes), mesh=ctx.mesh, batch_axes=ctx.batch_axes,
+            model_axis=ctx.model_axis, variant=variant, policy=policy, **kw)
     return ops.fno_block_nd(x, spec_params["wr"], spec_params["wi"], wb,
                             byp_params["b"], tuple(modes), path=path,
                             variant=variant, policy=policy, **kw)

@@ -12,7 +12,7 @@
 
 Everything is stateless and seeded: batch i of a run is a pure function of
 (seed, i), so any host can regenerate any shard after failover
-(DESIGN.md §6 fault tolerance).
+(docs/DESIGN.md §6 fault tolerance).
 """
 from __future__ import annotations
 

@@ -3,7 +3,14 @@
 Model code calls ``shard_activation(x, kind)`` at layer boundaries; outside a
 ``sharding_context`` these are no-ops (CPU unit tests), inside one they become
 ``with_sharding_constraint`` with specs derived from the mesh and the
-architecture (DESIGN.md §6).
+architecture (docs/DESIGN.md §6).
+
+FNO strategy: DP shards the batch axis; TP shards the HIDDEN/channel axis —
+the fused engine's k-loop contraction axis — whenever the model axis divides
+``cfg.hidden``. The TP partial pre-activations are completed by a ``psum``
+inside the shard_map dispatch (``kernels.ops.fno_block_nd_sharded``); when
+TP is off the model axis folds into the batch axes and the (tiny) FNO
+weights replicate (docs/DESIGN.md §6).
 
 TP strategy per architecture (``attn_tp``): attention shards over the "model"
 axis when query heads divide it; KV heads are REPLICATED up to one copy per
@@ -43,6 +50,24 @@ class ShardingContext:
 _TLS = threading.local()
 
 
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """Version-safe shard_map (ROADMAP.md §JAX version compat): the entry
+    point moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+    and ``check_rep`` was renamed ``check_vma``. Replication checking is
+    disabled either way — the FNO dispatch closes over custom_vjp pallas
+    wrappers that carry no replication rules."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+        except TypeError:
+            continue
+    raise RuntimeError("no compatible shard_map signature found")
+
+
 def current_context() -> Optional[ShardingContext]:
     return getattr(_TLS, "ctx", None)
 
@@ -80,12 +105,31 @@ def kv_repeat(cfg: ModelConfig, tp: int) -> int:
     return tp // cfg.num_kv_heads
 
 
-def make_context(cfg, mesh, *, kind: str = "train") -> ShardingContext:
-    """Standard context for an (arch × step-kind) cell."""
+def make_context(cfg, mesh, *, kind: str = "train",
+                 fno_strategy: Optional[str] = None) -> ShardingContext:
+    """Standard context for an (arch × step-kind) cell.
+
+    FNO (docs/DESIGN.md §6): DP shards the batch axis and TP shards the
+    hidden/channel axis — the fused engine's k-loop contraction axis —
+    whenever the model axis divides ``cfg.hidden`` (``fno_strategy`` None
+    or "auto"). ``fno_strategy="dp"`` folds the model axis into the batch
+    axes instead (weights replicated, no per-layer collective — the right
+    call when batch ≫ hidden); indivisible hidden degrades to the same.
+    ``kind`` is "train" or "serve" for FNO — the placement is identical,
+    FNO serving being a pure batch-throughput forward.
+    """
     tp = mesh.shape.get("model", 1)
     pod = "pod" in mesh.shape
     batch: Tuple[str, ...] = ("pod", "data") if pod else ("data",)
     seq_axis = None
+    if isinstance(cfg, FNOConfig):
+        tp_on = (fno_strategy or "auto") != "dp" and tp > 1 \
+            and cfg.hidden % tp == 0
+        if not tp_on and "model" in mesh.shape:
+            batch = batch + ("model",)
+        return ShardingContext(mesh=mesh, batch_axes=batch,
+                               model_axis="model" if tp_on else None,
+                               attn_sharded=False)
     if isinstance(cfg, ModelConfig):
         a_tp = attn_tp(cfg, tp)
         r = kv_repeat(cfg, tp)
@@ -121,7 +165,9 @@ def activation_spec(kind: str, ctx: ShardingContext) -> Optional[P]:
         "kv": P(b, s, m if ctx.attn_sharded else None, None),
         "experts": P(b, m, None, None),  # [B, E, C, D] per-row dispatch
         "ssm_inner": P(b, s, m),  # [B, S, d_inner]
-        "fno": P(b, None, None, None),  # [B, C, *spatial]
+        "fno": P(b, None, None, None),  # [B, C_io, *spatial] boundaries
+        "fno_hidden": P(b, m, None, None),  # [B, H, *spatial]: H = TP k-loop
+        "fno_lift": P(b, m, None, None),  # [B, lift, *spatial] MLP inner
     }
     return table.get(kind)
 
@@ -249,29 +295,47 @@ def _lm_leaf_spec(pstr: str, shape, cfg: ModelConfig, tp: int) -> P:
 
 
 def _fno_leaf_spec(pstr: str, shape, cfg: FNOConfig, tp: int) -> P:
+    """FNO tensor parallelism shards the CONTRACTION (hidden) axis — the
+    fused engine's k-loop — so every TP shard computes a partial FNO block
+    that ``kernels.ops.fno_block_nd_sharded`` completes with a psum over
+    the model axis (docs/DESIGN.md §6). The lifting/projection MLPs follow
+    the Megatron column→row pattern around the lifting dim."""
     m = "model"
     h_m = m if _div(cfg.hidden, tp) else None
-    if "spectral" in pstr:  # wr/wi [O, H, (modes...)]
-        return P(h_m, *([None] * (len(shape) - 1)))
-    if "bypass" in pstr or "lift" in pstr or "proj" in pstr:
-        dout = shape[-1]
-        d_m = m if _div(dout, tp) else None
-        if pstr.endswith("/w"):
-            return P(*([None] * (len(shape) - 1)), d_m)
-        return P(*([None] * (len(shape) - 1)), d_m)
-    return P(*([None] * len(shape)))
+    lift = cfg.lifting_dim or 2 * cfg.hidden
+    l_m = m if _div(lift, tp) else None
+    pad = (None,) * max(len(shape) - 2, 0)
+    if "spectral" in pstr:  # wr/wi [O, H(, modes...)]: shard H (k-loop)
+        return P(None, h_m, *pad)
+    if "bypass" in pstr:  # dense [H_in, H_out]: shard the contraction dim
+        return P(h_m, None) if pstr.endswith("/w") else P(None)
+    if "lift1" in pstr:  # column-parallel into the lifting dim
+        return P(None, l_m) if pstr.endswith("/w") else P(l_m)
+    if "lift2" in pstr:  # row-parallel back down to hidden
+        return P(l_m, None) if pstr.endswith("/w") else P(None)
+    if "proj1" in pstr:  # row-parallel over the (sharded) hidden
+        return P(h_m, None) if pstr.endswith("/w") else P(None)
+    return P(*([None] * len(shape)))  # proj2 + biases: replicate (tiny)
 
 
-def param_specs(cfg, mesh: Mesh, params, fsdp: bool = True) -> Any:
+def param_specs(cfg, mesh: Mesh, params, fsdp: bool = True,
+                fno_tp: bool = True) -> Any:
     """Spec pytree with the same structure as ``params`` (arrays or SDS).
 
     fsdp=True additionally shards every weight matrix over the data axis
     (ZeRO-3 for training; 2D weight-stationary sharding for decode of the
-    biggest archs — nothing else fits 341B+ on 256 chips)."""
+    biggest archs — nothing else fits 341B+ on 256 chips).
+
+    fno_tp=False replicates the FNO weights (the pure-DP strategy: the
+    model axis is folded into the batch axes by ``make_context``, so the
+    hidden axis must not also be sharded over it). Pass
+    ``ctx.model_axis is not None`` from a context-driven caller."""
     tp = mesh.shape.get("model", 1)
     dp = mesh.shape.get("data", 1)
     is_lm = isinstance(cfg, ModelConfig)
     leaf_fn = _lm_leaf_spec if is_lm else _fno_leaf_spec
+    if not is_lm and not fno_tp:
+        tp = 0  # pure-DP FNO: _div() never holds, every leaf replicates
     # >=100B archs extend FSDP across the pod axis too (state /512) —
     # cross-pod weight gathers are the price of fitting at all.
     entry: Any = "data"
@@ -290,9 +354,10 @@ def param_specs(cfg, mesh: Mesh, params, fsdp: bool = True) -> Any:
     return jax.tree_util.tree_map_with_path(assign, params)
 
 
-def opt_state_specs(cfg, mesh: Mesh, params, opt_state) -> Any:
+def opt_state_specs(cfg, mesh: Mesh, params, opt_state,
+                    fno_tp: bool = True) -> Any:
     """AdamW state mirrors param sharding; step is replicated."""
-    pspecs = param_specs(cfg, mesh, params)
+    pspecs = param_specs(cfg, mesh, params, fno_tp=fno_tp)
     return {"m": pspecs, "v": pspecs, "step": P()}
 
 

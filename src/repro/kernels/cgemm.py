@@ -4,7 +4,7 @@ The paper builds a CUDA-core CGEMM with m_tb=32, n_tb=32, k_tb=8 and double
 smem buffering (Table 1). The TPU analogue uses MXU-aligned 128-tiles; the
 k-loop is the innermost grid dimension with an f32 VMEM accumulator, and
 Pallas's automatic pipelining plays the role of double buffering
-(DESIGN.md §2). Complex product = 4 real matmuls.
+(docs/DESIGN.md §2). Complex product = 4 real matmuls.
 """
 from __future__ import annotations
 

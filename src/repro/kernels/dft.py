@@ -4,7 +4,7 @@ These are the standalone "FFT with built-in truncation / zero-padding"
 kernels (paper §3.3): truncation = the DFT operand simply has `modes`
 columns; zero-padding = the iDFT operand has `modes` rows. No separate copy
 kernels exist anywhere. Pruning = the rows of the full DFT matrix that are
-never materialized (DESIGN.md §3.2).
+never materialized (docs/DESIGN.md §3.2).
 
 Grid: 1-D over row-tiles of the flattened batch. The DFT matrices are
 broadcast operands resident in VMEM for every program.

@@ -540,7 +540,7 @@ def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
 
     x: [B,H,X,Y]; w: [O,H] or [O,H,kx,ky]. variant: "partial" fuses only
     around the CGEMM (paper-faithful); "full" fuses the entire layer
-    (beyond-paper, DESIGN.md §3.4). path="pallas" is differentiable via
+    (beyond-paper, docs/DESIGN.md §3.4). path="pallas" is differentiable via
     custom_vjp (fused backward for both variants). policy: see
     spectral_layer_1d.
     """
@@ -588,8 +588,8 @@ def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
 # The backward always runs the fully fused pipeline — partial and full
 # compute the same function, so one adjoint serves both variants.
 # ---------------------------------------------------------------------------
-def _block_tail(s, x, wb, bias, out_dtype):
-    """The staged block epilogue — XLA bypass GEMM + bias + GELU on a
+def _block_tail(s, x, wb, bias, out_dtype, act: str = "gelu"):
+    """The staged block epilogue — XLA bypass GEMM + bias + activation on a
     spectral output s. Shared by the oracle paths AND the partial-variant
     pallas path so the parity target and the implementation can never
     diverge: z accumulates in f32, the single down-cast is the return."""
@@ -597,58 +597,71 @@ def _block_tail(s, x, wb, bias, out_dtype):
                      preferred_element_type=jnp.float32)
     z = (s.astype(jnp.float32) + byp
          + bias.astype(jnp.float32).reshape((1, -1) + (1,) * (x.ndim - 2)))
-    return jax.nn.gelu(z).astype(out_dtype)
+    if act == "gelu":
+        z = jax.nn.gelu(z)
+    return z.astype(out_dtype)
 
 
-def _fno_block_oracle(x, wr, wi, wb, bias, modes, path, pol):
+def _fno_block_oracle(x, wr, wi, wb, bias, modes, path, pol, act="gelu"):
     """Staged parity oracle: spectral layer (ref/xla path) + XLA bypass +
-    bias + GELU — the exact math the one-kernel pallas path fuses."""
+    bias + activation — the exact math the one-kernel pallas path fuses."""
     s = _spectral_layer_nd(x, wr, wi, modes, path, "full", 0, 0, 0,
                            None, pol)
     cp = jnp.dtype(pol.compute_dtype) if pol is not None else x.dtype
-    return _block_tail(s, x.astype(cp), wb, bias, s.dtype)
+    return _block_tail(s, x.astype(cp), wb, bias, s.dtype, act)
 
 
 def _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
-                    interpret, pol):
+                    interpret, pol, act, out_dtype):
     # Same cast contract as the spectral layer: compute-dtype casts live
     # inside the custom_vjp so the caller's primal/cotangent dtypes are
     # preserved (PrecisionPolicy — ROADMAP.md §Precision policy).
+    # out_dtype (default: the compute dtype) overrides the single ref-write
+    # emission — the TP-sharded dispatch keeps the partial pre-activations
+    # at the accumulator dtype through the psum.
     cp = jnp.dtype(pol.compute_dtype)
+    od = jnp.dtype(out_dtype) if out_dtype else cp
     x, wr, wi, wb, bias = (a.astype(cp) for a in (x, wr, wi, wb, bias))
     if variant == "full":
         return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol,
-                            wb=wb, bias=bias, act="gelu")
+                            wb=wb, bias=bias, act=act, out_dtype=od.name)
     # Paper-faithful partial fusion keeps the multi-kernel spectral
-    # pipeline; the block tail (bypass+bias+gelu) runs as XLA ops. The
+    # pipeline; the block tail (bypass+bias+act) runs as XLA ops. The
     # BACKWARD still uses the fully fused adjoint (one linear map).
     s = _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret, pol)
-    return _block_tail(s, x, wb, bias, cp)
+    return _block_tail(s, x, wb, bias, od, act)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(5, 6, 7, 8, 9, 10, 11, 12, 13))
 def _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
-                         interpret, pol):
+                         interpret, pol, act, out_dtype):
     return _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
-                           interpret, pol)
+                           interpret, pol, act, out_dtype)
 
 
 def _fno_block_vjp_fwd(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
-                       interpret, pol):
+                       interpret, pol, act, out_dtype):
     y = _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
-                        interpret, pol)
+                        interpret, pol, act, out_dtype)
     return y, (x, wr, wi, wb, bias)
 
 
-def _fno_block_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, res, gy):
+def _fno_block_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, act,
+                       out_dtype, res, gy):
     x, wr, wi, wb, bias = res
     cp = jnp.dtype(pol.compute_dtype)
     xc, wrc, wic, wbc, biasc = (a.astype(cp) for a in (x, wr, wi, wb, bias))
     gyc = gy.astype(cp)
-    # (1) recompute the pre-activation through the fused forward and form
-    # gz = gy·gelu'(z) in the epilogue — z never materializes in HBM.
-    gz = _fnond_fused(xc, wrc, wic, modes, bb, bo, bh, interpret, pol,
-                     wb=wbc, bias=biasc, gy=gyc, act="gelu_vjp")
+    if act == "gelu":
+        # (1) recompute the pre-activation through the fused forward and
+        # form gz = gy·gelu'(z) in the epilogue — z never reaches HBM.
+        gz = _fnond_fused(xc, wrc, wic, modes, bb, bo, bh, interpret, pol,
+                          wb=wbc, bias=biasc, gy=gyc, act="gelu_vjp")
+    else:
+        # Linear block (the TP-sharded partial): z IS the output, so the
+        # incoming cotangent is gz directly — no recompute kernel.
+        gz = gyc
     # (2) dx = spectral_adjoint(gz) + gz·W_b: the same block kernel with
     # adjoint operands, swapped spectral weight, transposed bypass, linear
     # epilogue; dx emitted at the primal dtype from the f32 accumulator.
@@ -674,8 +687,10 @@ def fno_block_nd(x: jax.Array, wr: jax.Array, wi: jax.Array, wb: jax.Array,
                  path: str = "pallas", variant: str = "full",
                  bb: int = 0, bo: int = 0, bh: int = 0,
                  interpret: Optional[bool] = None,
-                 policy: Optional[PrecisionPolicy] = None) -> jax.Array:
-    """One whole FNO block: y = gelu(spectral(x) + x·W_bᵀ + bias).
+                 policy: Optional[PrecisionPolicy] = None,
+                 act: str = "gelu",
+                 out_dtype: Optional[str] = None) -> jax.Array:
+    """One whole FNO block: y = act(spectral(x) + x·W_bᵀ + bias).
 
     x: [B,H,s_1..s_R]; wr/wi: [O,H] or [O,H,k_1..k_R] spectral weight;
     wb: [O,H] bypass 1×1 conv (y_o += Σ_h x_h·wb[o,h]); bias: [O].
@@ -687,11 +702,96 @@ def fno_block_nd(x: jax.Array, wr: jax.Array, wi: jax.Array, wb: jax.Array,
     tail) but shares the same fused backward. path="ref"/"xla" are the
     staged parity oracles. Block sizes default per rank
     (``_BLOCK_DEFAULTS``); policy: see spectral_layer_1d.
+
+    act: "gelu" (the standard block) or "linear" (pre-activation only —
+    the TP-sharded dispatch reduces partial pre-activations with a psum
+    BEFORE the nonlinearity; its backward skips the gz-recompute kernel).
+
+    out_dtype (pallas path only) overrides the ref-write emission dtype —
+    the TP dispatch emits partials at the accumulator dtype so the psum
+    stays f32 under the bf16 policy (ROADMAP.md §Precision policy).
     """
     modes = _modes_key(modes)
     bb, bo, bh = _resolve_blocks(len(modes), bb, bo, bh)
+    assert act in ("gelu", "linear"), act
     if path in ("ref", "xla"):
-        return _fno_block_oracle(x, wr, wi, wb, bias, modes, path, policy)
+        return _fno_block_oracle(x, wr, wi, wb, bias, modes, path, policy,
+                                 act)
     pol = policy or _default_policy(x, wr)
     return _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, bb, bo,
-                                bh, _interpret(interpret), pol)
+                                bh, _interpret(interpret), pol, act,
+                                out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# DP×TP shard_map dispatch of the fused block (docs/DESIGN.md §6).
+#
+# DP shards the leading batch axis over `batch_axes`; TP shards the HIDDEN
+# axis — the engine's k-loop contraction — over `model_axis`, so every
+# shard runs the SAME fused kernel on its hidden slice and produces a
+# partial pre-activation. The partials are completed with one lax.psum per
+# layer over the model axis, and only then do bias + GELU apply (a
+# nonlinearity cannot commute past a sharded contraction), so the TP
+# epilogue runs as XLA ops on the reduced value while the kernel keeps
+# act="linear". Every spec is guard_spec-ed: an axis that does not divide
+# its dim degrades to replication instead of erroring.
+# ---------------------------------------------------------------------------
+def fno_block_nd_sharded(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                         wb: jax.Array, bias: jax.Array,
+                         modes: Sequence[int], *, mesh,
+                         batch_axes: Sequence[str] = ("data",),
+                         model_axis: Optional[str] = "model",
+                         variant: str = "full", bb: int = 0, bo: int = 0,
+                         bh: int = 0, interpret: Optional[bool] = None,
+                         policy: Optional[PrecisionPolicy] = None,
+                         act: str = "gelu") -> jax.Array:
+    """``fno_block_nd`` under shard_map on a (DP×TP) mesh — the production
+    dispatch behind ``core.spectral_conv.apply_fno_block_nd`` whenever a
+    ``sharding_context`` is active. Fully differentiable: shard_map
+    transposes the psum and replication for the backward, and each shard's
+    backward stays on the fused adjoint/wgrad kernels (custom_vjp)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map, guard_spec
+
+    modes = _modes_key(modes)
+    r = len(modes)
+    sp0 = (None,) * r
+    pol = policy or _default_policy(x, wr)
+    b_axes = tuple(a for a in batch_axes if a in mesh.shape)
+    b_ent = (b_axes if len(b_axes) > 1 else b_axes[0]) if b_axes else None
+    tp = mesh.shape.get(model_axis, 1) if model_axis else 1
+    xspec = guard_spec(P(b_ent, model_axis if tp > 1 else None, *sp0),
+                       x.shape, mesh)
+    tp_on = tp > 1 and xspec[1] is not None
+    h_ent = model_axis if tp_on else None
+    wspec = guard_spec(P(None, h_ent, *((None,) * (wr.ndim - 2))),
+                       wr.shape, mesh)
+    wbspec = guard_spec(P(None, h_ent), wb.shape, mesh)
+    out_spec = P(xspec[0], None, *sp0)
+    kw = dict(variant=variant, bb=bb, bo=bo, bh=bh, interpret=interpret,
+              policy=pol)
+
+    def local(xl, wrl, wil, wbl, bl):
+        if not tp_on:
+            return fno_block_nd(xl, wrl, wil, wbl, bl, modes,
+                                path="pallas", act=act, **kw)
+        # Partial pre-activations emit at the ACCUMULATOR dtype (f32 under
+        # the bf16 policy) so the cross-shard contraction — psum + bias +
+        # activation — stays f32 end-to-end; the single down-cast to the
+        # compute dtype is the return (same contract as the in-kernel
+        # epilogue it replaces).
+        z = fno_block_nd(xl, wrl, wil, wbl, jnp.zeros_like(bl), modes,
+                         path="pallas", act="linear",
+                         out_dtype=pol.accum_dtype, **kw)
+        z = jax.lax.psum(z, model_axis)
+        z = z + bl.astype(z.dtype).reshape((1, -1) + (1,) * r)
+        if act == "gelu":
+            z = jax.nn.gelu(z, approximate=True)
+        return z.astype(jnp.dtype(pol.compute_dtype))
+
+    fn = compat_shard_map(
+        local, mesh,
+        in_specs=(xspec, wspec, wspec, wbspec, P(None)),
+        out_specs=out_spec)
+    return fn(x, wr, wi, wb, bias)

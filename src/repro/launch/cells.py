@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_shape
+from repro.configs import fno as fno_cfgs
 from repro.configs.base import FNOConfig, ModelConfig, ShapeSpec
 from repro.core import fno as fno_mod
 from repro.distributed import sharding as shd
@@ -22,7 +23,7 @@ from repro.models import transformer as tf
 from repro.optim import AdamW
 from repro.optim.schedule import cosine_warmup
 from repro.roofline import analysis as roof
-from repro.train import serve_step, train_step as ts
+from repro.train import serve_fno_step as sfs, serve_step, train_step as ts
 
 # per-arch training knobs (memory fitting at 256 chips; EXPERIMENTS.md)
 DEFAULT_MICROBATCHES = 8
@@ -82,13 +83,26 @@ def _lm_batch_sds(cfg: ModelConfig, shape: ShapeSpec, with_labels: bool):
 
 
 def build_cell(arch: str, shape_name: str, mesh, *,
-               reduced: bool = False) -> Cell:
+               reduced: bool = False, fno_path: Optional[str] = None,
+               fno_fuse_block: Optional[bool] = None,
+               fno_dtype: Optional[str] = None,
+               fno_strategy: Optional[str] = None) -> Cell:
+    """(arch × shape × mesh) -> Cell.
+
+    The fno_* knobs override the FNO cell spec (``FNO_CELL_DEFAULTS``:
+    pallas path, fused blocks — the production configuration); a non-train
+    shape builds the batched FNO *serving* cell (``_build_fno_serve``).
+    """
     cfg = get_config(arch, reduced=reduced)
     shape = get_shape(shape_name, reduced=reduced)
     n = mesh.devices.size
 
     if isinstance(cfg, FNOConfig):
-        return _build_fno_train(arch, cfg, shape, mesh)
+        fno_kw = dict(path=fno_path, fuse_block=fno_fuse_block,
+                      dtype=fno_dtype, strategy=fno_strategy)
+        if shape.kind == "train":
+            return _build_fno_train(arch, cfg, shape, mesh, **fno_kw)
+        return _build_fno_serve(arch, cfg, shape, mesh, **fno_kw)
     kind = shape.kind
     if kind == "prefill" and not cfg.is_decoder:
         return _build_encoder(arch, cfg, shape, mesh)
@@ -218,44 +232,82 @@ def _build_decode(arch, cfg, shape, mesh, shard_seq: bool):
                 ctx, out_shardings=out_sh)
 
 
-FNO_STRATEGY = "dp"  # "dp" (optimized: pure data-parallel, weights
-#                        replicated — they are tiny) | "tp" (baseline:
-#                        hidden dim sharded over model; §Perf compares)
+# FNO cell spec (ISSUE 5): the fused pallas path IS the production path.
+# Every FNO cell runs the fused kernels with whole-block fusion unless the
+# caller overrides; dtype None keeps the config's preset (f32). The DP/TP
+# placement comes from shd.make_context — TP over the hidden k-loop axis
+# when the model axis divides it, pure DP (model folded into batch)
+# otherwise (docs/DESIGN.md §6). TRAINING defaults to pure DP: train_4k is
+# the batch ≫ hidden regime, where replicating the tiny FNO weights
+# removes every per-layer psum and only the gradient all-reduce remains;
+# TP is opt-in via fno_strategy="auto". Serving keeps the auto grid (the
+# serve driver balances dp ≥ tp).
+FNO_CELL_DEFAULTS = {"path": "pallas", "fuse_block": True, "variant": "full"}
+FNO_TRAIN_STRATEGY = "dp"
 
 
-def _build_fno_train(arch, cfg, shape, mesh, strategy=None):
-    strategy = strategy or FNO_STRATEGY
-    ctx = shd.make_context(cfg, mesh, kind="train")
-    if strategy == "dp":
-        # batch over data×model: FNO weights are ~100k-130M params —
-        # replicating them removes every per-layer collective; only the
-        # (tiny) gradient all-reduce remains.
-        if "pod" in mesh.shape:
-            ctx = dataclasses.replace(ctx, batch_axes=("pod", "data"))
-        else:
-            ctx = dataclasses.replace(ctx, batch_axes=("data", "model"))
+def _fno_cell_cfg(cfg, path, fuse_block, dtype):
+    cfg = dataclasses.replace(
+        cfg, path=path or FNO_CELL_DEFAULTS["path"],
+        fuse_block=(FNO_CELL_DEFAULTS["fuse_block"]
+                    if fuse_block is None else fuse_block))
+    if dtype:
+        cfg = fno_cfgs.with_precision(cfg, dtype)
+    return cfg
+
+
+def _fno_batch_sds(cfg, b, with_labels):
+    out = {"x": jax.ShapeDtypeStruct(
+        (b, cfg.in_channels) + tuple(cfg.spatial), jnp.float32)}
+    if with_labels:
+        out["y"] = jax.ShapeDtypeStruct(
+            (b, cfg.out_channels) + tuple(cfg.spatial), jnp.float32)
+    return out
+
+
+def _build_fno_train(arch, cfg, shape, mesh, *, path=None, fuse_block=None,
+                     dtype=None, strategy=None):
+    cfg = _fno_cell_cfg(cfg, path, fuse_block, dtype)
+    ctx = shd.make_context(cfg, mesh, kind="train",
+                           fno_strategy=strategy or FNO_TRAIN_STRATEGY)
     opt = _optimizer(arch)
-    step = ts.make_train_step(cfg, opt, fno_path="xla")
+    step = ts.make_train_step(cfg, opt, fno_path=cfg.path,
+                              fno_variant=FNO_CELL_DEFAULTS["variant"])
     b = shape.global_batch
     with shd.sharding_context(ctx):
         params = jax.eval_shape(
             lambda: fno_mod.init_fno(jax.random.PRNGKey(0), cfg))
         opt_state = jax.eval_shape(opt.init, params)
-    batch = {
-        "x": jax.ShapeDtypeStruct((b, cfg.in_channels) + tuple(cfg.spatial),
-                                  jnp.float32),
-        "y": jax.ShapeDtypeStruct((b, cfg.out_channels) + tuple(cfg.spatial),
-                                  jnp.float32),
-    }
-    if strategy == "dp":
-        pspec = jax.tree_util.tree_map(
-            lambda l: P(*([None] * len(l.shape))), params)
-    else:
-        pspec = shd.param_specs(cfg, mesh, params)
-    ospec = {"m": pspec, "v": pspec, "step": P()}
+    batch = _fno_batch_sds(cfg, b, with_labels=True)
+    fno_tp = ctx.model_axis is not None
+    pspec = shd.param_specs(cfg, mesh, params, fno_tp=fno_tp)
+    ospec = shd.opt_state_specs(cfg, mesh, params, opt_state, fno_tp=fno_tp)
     bspec = shd.batch_specs(cfg, ctx, batch)
     sh = lambda t: shd.shardings_from_specs(t, mesh)
     mf = roof.fno_model_flops(cfg, b)
     return Cell(arch, shape.name, _wrap_ctx(step, ctx),
                 (params, opt_state, batch),
                 (sh(pspec), sh(ospec), sh(bspec)), mf, ctx)
+
+
+def _build_fno_serve(arch, cfg, shape, mesh, *, path=None, fuse_block=None,
+                     dtype=None, strategy=None):
+    """Batched FNO serving cell: one bucketed forward on the DP×TP mesh
+    (shape.global_batch is the bucket size; train.serve_fno_step owns the
+    request bucketing/padding that feeds it)."""
+    cfg = _fno_cell_cfg(cfg, path, fuse_block, dtype)
+    ctx = shd.make_context(cfg, mesh, kind="serve", fno_strategy=strategy)
+    step = sfs.make_fno_serve_step(cfg,
+                                   variant=FNO_CELL_DEFAULTS["variant"])
+    b = shape.global_batch
+    with shd.sharding_context(ctx):
+        params = jax.eval_shape(
+            lambda: fno_mod.init_fno(jax.random.PRNGKey(0), cfg))
+    batch = _fno_batch_sds(cfg, b, with_labels=False)
+    pspec = shd.param_specs(cfg, mesh, params,
+                            fno_tp=ctx.model_axis is not None)
+    bspec = shd.batch_specs(cfg, ctx, batch)
+    sh = lambda t: shd.shardings_from_specs(t, mesh)
+    mf = roof.fno_model_flops(cfg, b, training=False)
+    return Cell(arch, shape.name, _wrap_ctx(step, ctx), (params, batch),
+                (sh(pspec), sh(bspec)), mf, ctx)

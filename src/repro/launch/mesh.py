@@ -3,7 +3,7 @@
 Functions (not module-level constants) so importing never touches jax
 device state. Production target: TPU v5e, 256 chips/pod, 16x16 (data, model);
 multi-pod = 2 pods x 256 = 512 chips with a leading "pod" axis that composes
-with data parallelism (DESIGN.md §6).
+with data parallelism (docs/DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -1,7 +1,14 @@
-"""Serving driver: batched prefill + autoregressive decode.
+"""Serving driver: batched prefill + autoregressive decode for the LM zoo,
+batched bucketed inference for the FNO archs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 16
+    PYTHONPATH=src python -m repro.launch.serve --arch fno2d --reduced \
+        --requests 8 --max-batch 8
+
+``--arch fno{1,2,3}d`` (any FNO id) delegates to ``launch.serve_fno`` —
+request bucketing, padding to the fused kernel's batch blocks, and the
+DP×TP pallas placement (docs/DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -11,13 +18,21 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
+from repro.configs import FNO_IDS, get_config
 from repro.models import transformer as tf
 from repro.models.frontend import fake_frontend_arrays
 from repro.train import serve_step
 
 
 def main() -> None:
+    peek = argparse.ArgumentParser(add_help=False)
+    peek.add_argument("--arch", default="qwen2-1.5b")
+    known, _ = peek.parse_known_args()
+    if known.arch in FNO_IDS:
+        from repro.launch import serve_fno
+        serve_fno.main()
+        return
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--reduced", action="store_true")

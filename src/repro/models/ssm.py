@@ -5,7 +5,7 @@ Forward uses the SSD block decomposition (Dao & Gu 2024): intra-chunk
 chunks), so all heavy compute is MXU-friendly einsums. Decode keeps an O(1)
 recurrent state per layer: (conv window, SSM state [H, N, P]).
 
-Simplifications vs. the reference CUDA implementation (DESIGN.md §5):
+Simplifications vs. the reference CUDA implementation (docs/DESIGN.md §5):
 ngroups = 1 (B/C shared across heads, matching the configs' param counts);
 the short causal conv + SiLU applies to the x branch only.
 """

@@ -166,9 +166,10 @@ def lm_model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int
     return mult * n_active * tokens
 
 
-def fno_model_flops(cfg, batch: int) -> float:
+def fno_model_flops(cfg, batch: int, *, training: bool = True) -> float:
     """Exact useful FLOPs of the truncated-DFT FNO layer algebra
-    (DESIGN.md §3.3), per batch element, ×3 for fwd+bwd (train step).
+    (docs/DESIGN.md §3.3), per batch element; training=True multiplies by
+    3 for fwd+bwd (train step), training=False is the serving forward.
 
     Rank-generic (matches the engine's stage order): each forward DFT
     stage transforms one spatial axis n_j→k_j over the pencils formed by
@@ -213,7 +214,7 @@ def fno_model_flops(cfg, batch: int) -> float:
     lifting = 2 * sp * (cfg.in_channels * lift + lift * h)
     proj = 2 * sp * (h * lift + lift * cfg.out_channels)
     fwd = batch * (cfg.num_layers * per_layer + lifting + proj)
-    return 3.0 * fwd  # train step
+    return (3.0 if training else 1.0) * fwd
 
 
 def fno_model_bytes(cfg, batch: int, *, variant: str = "full",

@@ -1,0 +1,127 @@
+"""Batched FNO serving: the forward step, request bucketing, and a
+jit-cached server for the fused pallas path (docs/DESIGN.md §6).
+
+FNO inference is a pure batch-throughput workload — one forward per request
+batch, no KV cache, no autoregression — so serving reduces to (1) batching
+requests, (2) padding each batch to a BUCKET size so the jit cache stays
+finite and the fused kernel's grid never re-specializes, and (3) running
+the bucketed forward on a DP×TP mesh. Buckets are multiples of the fused
+engine's batch block (``kernels.ops._BLOCK_DEFAULTS``) times the DP shard
+count, so neither the kernel nor the mesh ever sees a ragged batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FNOConfig
+from repro.core import fno as fno_mod
+from repro.distributed import sharding as shd
+from repro.kernels.ops import _BLOCK_DEFAULTS
+
+
+def make_fno_serve_step(cfg: FNOConfig, *, path: Optional[str] = None,
+                        variant: str = "full"):
+    """serve_step(params, batch{"x": [B,C_in,*spatial]}) -> y.
+
+    One batched forward at ``cfg.precision``; ``path`` defaults to
+    ``cfg.path`` (the production cells set "pallas" + ``cfg.fuse_block``).
+    Run it inside a ``sharding_context`` for the DP×TP placement.
+    """
+    def fno_serve_step(params, batch: Dict[str, jax.Array]) -> jax.Array:
+        return fno_mod.apply_fno(params, cfg, batch["x"],
+                                 path=path or cfg.path, variant=variant)
+    return fno_serve_step
+
+
+def batch_block(cfg: FNOConfig) -> int:
+    """The fused engine's batch block (bb) for this rank — the serving
+    quantum, so the kernel grid never pads the batch internally."""
+    return _BLOCK_DEFAULTS[cfg.ndim][0]
+
+
+def bucket_sizes(max_batch: int, *, quantum: int = 1) -> Tuple[int, ...]:
+    """Geometric bucket ladder (quantum, 2q, 4q, … ≥ max_batch): one jit
+    cache entry per bucket, log2(max/quantum)+1 compiles total."""
+    q = max(quantum, 1)
+    sizes = [q]
+    while sizes[-1] < max_batch:
+        sizes.append(sizes[-1] * 2)
+    return tuple(sizes)
+
+
+def pick_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket ≥ n (the largest bucket for oversize batches — the
+    caller chunks those)."""
+    for b in buckets:
+        if b >= n:
+            return b
+    return buckets[-1]
+
+
+def pad_to_bucket(x: jax.Array, bucket: int) -> Tuple[jax.Array, int]:
+    """Zero-pad the batch axis to `bucket`; returns (padded, n_valid)."""
+    n = x.shape[0]
+    if n == bucket:
+        return x, n
+    pad = [(0, bucket - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad), n
+
+
+class FNOServer:
+    """Request-batched FNO inference on the fused pallas path.
+
+    Pads every request batch to a bucket (``bucket_sizes``), keeps one jit
+    cache entry per bucket, and — given a ``ShardingContext`` — traces the
+    step inside it so the forward runs DP over the batch axes and TP over
+    the hidden axis (the shard_map dispatch in ``kernels.ops``). The
+    un-jitted ``step_fn`` is exposed for trace-level guards
+    (``roofline.hlo_counter.count_pallas_calls``).
+    """
+
+    def __init__(self, cfg: FNOConfig, params, *,
+                 ctx: Optional[shd.ShardingContext] = None,
+                 path: Optional[str] = None, variant: str = "full",
+                 max_batch: int = 64, quantum: Optional[int] = None):
+        self.cfg, self.params, self.ctx = cfg, params, ctx
+        q = quantum or batch_block(cfg)
+        if ctx is not None:
+            for a in ctx.batch_axes:  # buckets must split across DP shards
+                q *= ctx.mesh.shape.get(a, 1)
+        self.buckets = bucket_sizes(max_batch, quantum=q)
+        base = make_fno_serve_step(cfg, path=path, variant=variant)
+        if ctx is not None:
+            def step_fn(params, batch):
+                with shd.sharding_context(ctx):
+                    return base(params, batch)
+        else:
+            step_fn = base
+        self.step_fn = step_fn
+        self._step = jax.jit(step_fn)
+        self.stats = {"requests": 0, "samples": 0, "padded": 0}
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Serve one request batch x [n, C_in, *spatial] -> [n, C_out, …].
+
+        Oversize batches are chunked at the largest bucket; the tail chunk
+        pads up to its own bucket; an empty batch returns an empty output
+        without touching the step."""
+        n = x.shape[0]
+        if n == 0:
+            return jnp.zeros(
+                (0, self.cfg.out_channels) + tuple(x.shape[2:]),
+                jnp.dtype(self.cfg.precision.compute_dtype))
+        top = self.buckets[-1]
+        ys = []
+        for s in range(0, n, top):
+            chunk = x[s:s + top]
+            b = pick_bucket(chunk.shape[0], self.buckets)
+            xp, m = pad_to_bucket(chunk, b)
+            y = self._step(self.params, {"x": xp})
+            self.stats["padded"] += b - m
+            ys.append(y[:m])
+        self.stats["requests"] += 1
+        self.stats["samples"] += n
+        return jnp.concatenate(ys, 0) if len(ys) > 1 else ys[0]

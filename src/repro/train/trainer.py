@@ -1,5 +1,5 @@
 """Training loop with checkpoint/restart, failure injection, and straggler
-monitoring — the fault-tolerance glue (DESIGN.md §6).
+monitoring — the fault-tolerance glue (docs/DESIGN.md §6).
 
 The loop is restart-idempotent: state = (params, opt_state) in the
 checkpoint; the data pipeline is stateless (batch = f(seed, step)), so a

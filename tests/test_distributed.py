@@ -1,6 +1,7 @@
 """Multi-device distribution tests (subprocess with 8 virtual CPU devices):
 sharded-vs-single equivalence, pipeline parallelism, gradient compression,
-elastic restore, dry-run cell compilation."""
+elastic restore, dry-run cell compilation, and the DP×TP fused-FNO path
+(ISSUE 5: the shard_map dispatch in kernels.ops + the FNO leaf specs)."""
 import pytest
 
 
@@ -170,4 +171,195 @@ def test_reduced_cells_compile_multipod(subproc, arch, shape):
     ca = ca[0] if isinstance(ca, list) else ca  # list-of-dicts on jax 0.4.x
     assert ca.get("flops", 0) > 0
     print("cell OK", "{arch}", "{shape}")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Sharded FNO (ISSUE 5): the fused pallas block under DP and DP×TP meshes
+# must match the single-device XLA oracle to the test_precision f32
+# tolerance (2e-4); TP shards the hidden k-loop axis with the partial
+# pre-activations psum-reduced inside the shard_map dispatch.
+# ---------------------------------------------------------------------------
+def test_fno_dp_tp_fused_block_matches_single(subproc):
+    subproc("""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    key = jax.random.PRNGKey(0)
+    params = fno_mod.init_fno(key, cfg)
+    x = jax.random.normal(key, (8, cfg.in_channels) + tuple(cfg.spatial))
+    y_ref = fno_mod.apply_fno(params, cfg, x, path="xla")
+
+    for dp, tp in ((8, 1), (4, 2), (2, 4)):
+        mesh = make_debug_mesh(dp, tp)
+        ctx = shd.make_context(cfg, mesh, kind="serve")
+        # tp=1 folds model into the batch axes (pure DP); tp>1 shards the
+        # hidden k-loop axis over "model"
+        assert (ctx.model_axis == "model") == (tp > 1), (dp, tp, ctx)
+        def fwd(p, xx):
+            with shd.sharding_context(ctx):
+                return fno_mod.apply_fno(p, cfg, xx, path="pallas")
+        y = jax.jit(fwd)(params, x)
+        err = float(jnp.abs(y - y_ref).max())
+        assert err < 2e-4, (dp, tp, err)
+        print(f"dp={dp} tp={tp} max_err={err:.2e}")
+    print("fno dp/tp parity OK")
+    """)
+
+
+def test_fno_tp_bf16_matches_single_device(subproc):
+    # The TP cast contract: partial pre-activations cross the psum at the
+    # ACCUMULATOR dtype (f32), so the bf16 DP×TP block must match the
+    # single-device bf16 pallas path to f32-parity tolerance — not merely
+    # the bf16-vs-f32 tolerance.
+    subproc("""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.configs.fno import with_precision
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+
+    cfg = dataclasses.replace(
+        with_precision(get_config("fno2d", reduced=True), "bf16"),
+        path="pallas", fuse_block=True)
+    key = jax.random.PRNGKey(0)
+    params = fno_mod.init_fno(key, cfg)
+    x = jax.random.normal(key, (8, cfg.in_channels) + tuple(cfg.spatial))
+    y_single = fno_mod.apply_fno(params, cfg, x, path="pallas")
+    assert y_single.dtype == jnp.bfloat16, y_single.dtype
+
+    mesh = make_debug_mesh(2, 4)
+    ctx = shd.make_context(cfg, mesh)
+    assert ctx.model_axis == "model"
+    def fwd(p, xx):
+        with shd.sharding_context(ctx):
+            return fno_mod.apply_fno(p, cfg, xx, path="pallas")
+    y = jax.jit(fwd)(params, x)
+    assert y.dtype == jnp.bfloat16, y.dtype
+    err = float(jnp.abs(y.astype(jnp.float32)
+                        - y_single.astype(jnp.float32)).max())
+    scale = float(jnp.abs(y_single.astype(jnp.float32)).max())
+    assert err < 2e-2 * max(scale, 1.0), (err, scale)
+    print("fno bf16 tp parity OK", err)
+    """)
+
+
+def test_fno_dp_tp_grads_match_single(subproc):
+    subproc("""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    key = jax.random.PRNGKey(0)
+    params = fno_mod.init_fno(key, cfg)
+    batch = {
+        "x": jax.random.normal(key, (8, cfg.in_channels)
+                               + tuple(cfg.spatial)),
+        "y": jax.random.normal(jax.random.fold_in(key, 1),
+                               (8, cfg.out_channels) + tuple(cfg.spatial)),
+    }
+    g_ref = jax.grad(
+        lambda p: fno_mod.fno_loss(p, cfg, batch, path="xla"))(params)
+
+    mesh = make_debug_mesh(4, 2)
+    ctx = shd.make_context(cfg, mesh)
+    def loss(p):
+        with shd.sharding_context(ctx):
+            return fno_mod.fno_loss(p, cfg, batch, path="pallas")
+    g = jax.jit(jax.grad(loss))(params)
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), g, g_ref)
+    mx = max(jax.tree_util.tree_leaves(d))
+    assert mx < 1e-4, mx
+    print("fno dp x tp grads OK", mx)
+    """)
+
+
+def test_fno_leaf_specs_and_guard(subproc):
+    subproc("""
+    import jax, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+
+    cfg = get_config("fno2d", reduced=True)  # hidden=16
+    params = jax.eval_shape(
+        lambda: fno_mod.init_fno(jax.random.PRNGKey(0), cfg))
+
+    # TP divides hidden (16 % 2 == 0): spectral shards the HIDDEN (k-loop)
+    # axis, bypass shards its contraction dim, biases replicate.
+    mesh = make_debug_mesh(4, 2)
+    specs = shd.param_specs(cfg, mesh, params)
+    blk = specs["blocks"][0]
+    assert blk["spectral"]["wr"] == P(None, "model"), blk["spectral"]["wr"]
+    assert blk["bypass"]["w"] == P("model", None), blk["bypass"]["w"]
+    assert blk["bypass"]["b"] == P(None), blk["bypass"]["b"]
+    assert specs["lift2"]["w"] == P("model", None)
+    assert specs["proj1"]["w"] == P("model", None)
+
+    # guard_spec regression: a model axis that does NOT divide hidden must
+    # degrade the FNO leaf specs to replication, not error (mesh 2x3 on 8
+    # forced devices: 16 % 3 != 0).
+    mesh3 = shd.Mesh(np.array(jax.devices()[:6]).reshape(2, 3),
+                     ("data", "model"))
+    specs3 = shd.param_specs(cfg, mesh3, params)
+    for leaf in jax.tree_util.tree_leaves(
+            specs3, is_leaf=lambda s: isinstance(s, P)):
+        assert all(e is None for e in tuple(leaf)), leaf
+    # ...and make_context folds the unusable model axis into the batch.
+    ctx3 = shd.make_context(cfg, mesh3)
+    assert ctx3.model_axis is None and "model" in ctx3.batch_axes
+
+    # fno_tp=False (pure DP) replicates even when hidden divides.
+    specs_dp = shd.param_specs(cfg, mesh, params, fno_tp=False)
+    for leaf in jax.tree_util.tree_leaves(
+            specs_dp, is_leaf=lambda s: isinstance(s, P)):
+        assert all(e is None for e in tuple(leaf)), leaf
+
+    # spec trees always match the params structure exactly.
+    assert (jax.tree_util.tree_structure(specs,
+                is_leaf=lambda s: isinstance(s, P)).num_leaves
+            == jax.tree_util.tree_structure(params).num_leaves)
+    print("fno leaf specs + guard OK")
+    """)
+
+
+@pytest.mark.parametrize("shape,kw,want_tp", [
+    # training defaults to pure DP (batch >> hidden: model axis folds into
+    # the batch, weights replicate); TP is opt-in via fno_strategy
+    ("train_4k", "", False),
+    ("train_4k", ", fno_strategy='auto'", True),
+    # the serving cell keeps the auto DP x TP grid
+    ("prefill_32k", "", True),
+])
+def test_fno_cells_compile_dp_tp(subproc, shape, kw, want_tp):
+    subproc(f"""
+    import jax
+    from repro.launch import cells as cm
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(4, 2)
+    cell = cm.build_cell("fno2d", "{shape}", mesh, reduced=True{kw})
+    # the production FNO cells run the fused pallas path by default
+    assert (cell.ctx.model_axis == "model") == {want_tp}, cell.ctx
+    j = jax.jit(cell.step_fn, in_shardings=cell.in_shardings)
+    co = j.lower(*cell.args).compile()
+    ca = co.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca  # list-of-dicts on jax 0.4.x
+    assert ca.get("flops", 0) > 0
+    print("fno cell OK", "{shape}")
     """)
