@@ -14,6 +14,11 @@ python scripts/fused_block_smoke.py
 # sharded dispatch and that every served output is finite.
 python -m repro.launch.serve --arch fno2d --reduced --requests 2 \
   --max-batch 2
+# Contract lint (ISSUE 6): AST rules, config-registry audit, static VMEM
+# estimates, and the jaxpr trace lints (pallas counts / cast ownership /
+# collective budget) over the whole config matrix. Pure tracing + AST —
+# no kernels execute.
+python scripts/lint.py --all
 # Collection gate: when pytest selection args (-k/-m/paths) could deselect
 # a broken module, a full collect-only pass must still fail the script on
 # any collection error. A bare run needs no gate — pytest itself exits

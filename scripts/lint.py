@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Contract linter CLI (docs/DESIGN.md §7).
+
+Sweeps the repo's machine-checked design contracts:
+
+  --ast       source lints (compiler-params shim, compat_shard_map,
+              no raw jnp.fft, dtype literals) — no jax, runs first
+  --registry  config-registry audit (every seeded arch: runnable cell or
+              non-empty skip reason)
+  --vmem      static VMEM-footprint estimates for every engine launch
+              across the FNO configs × dtypes × variants
+  --trace     jaxpr trace lints: pallas_call counts, cast ownership, and
+              collective budget over ranks 1-3 × weight layouts × fusion
+              variants × f32/bf16 × DP/TP (needs the 8 virtual devices
+              this script forces below)
+  --all       everything above (what scripts/check.sh and CI run)
+
+Exit status is the number of error-severity findings (capped at 1);
+warn-severity findings are printed but do not fail the lint.
+
+Usage: PYTHONPATH=src python scripts/lint.py --all
+"""
+import argparse
+import os
+import sys
+
+# Virtual devices for the DP/TP trace lints — MUST precede any jax import.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true", help="run every lint")
+    ap.add_argument("--ast", action="store_true")
+    ap.add_argument("--registry", action="store_true")
+    ap.add_argument("--vmem", action="store_true")
+    ap.add_argument("--trace", action="store_true")
+    args = ap.parse_args()
+    if not (args.all or args.ast or args.registry or args.vmem
+            or args.trace):
+        ap.error("pick at least one of --all/--ast/--registry/--vmem/"
+                 "--trace")
+
+    from repro.analysis import errors, format_findings
+
+    findings = []
+
+    if args.all or args.ast:
+        from repro.analysis import ast_lint
+        fs = ast_lint.run_ast_lints()
+        print(f"ast lints: {len(errors(fs))} error(s)")
+        findings += fs
+
+    if args.all or args.registry:
+        from repro.analysis import ast_lint
+        fs = ast_lint.check_config_registry()
+        print(f"config-registry audit: {len(errors(fs))} error(s)")
+        findings += fs
+
+    if args.all or args.vmem:
+        from repro.analysis import vmem
+        fs = vmem.check_vmem()
+        nw = sum(1 for f in fs if f.severity == "warn")
+        print(f"vmem estimates: {len(errors(fs))} error(s), "
+              f"{nw} warn(s)")
+        findings += fs
+
+    if args.all or args.trace:
+        from repro.analysis import jaxpr_lint
+        for name, run in (
+                ("block matrix", jaxpr_lint.lint_block_matrix),
+                ("fused models", jaxpr_lint.lint_model),
+                ("sharded blocks", jaxpr_lint.lint_sharded_blocks),
+                ("serve steps", jaxpr_lint.lint_serve)):
+            fs = run()
+            print(f"trace lints [{name}]: {len(errors(fs))} error(s)")
+            findings += fs
+
+    if findings:
+        print(format_findings(findings))
+    errs = errors(findings)
+    print(f"contract lint: {len(errs)} error(s), "
+          f"{len(findings) - len(errs)} warn(s)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

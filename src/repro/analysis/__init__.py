@@ -1,0 +1,58 @@
+"""Contract linter: machine-checked enforcement of the repo's durable
+design contracts (ROADMAP.md §Durable design contracts, docs/DESIGN.md §7).
+
+Two layers, one ``Finding`` currency:
+
+  * ``analysis.jaxpr_lint`` — trace lints: checkers that trace production
+    entry points (fwd/grad of ``kernels.ops.fno_block_nd``, the sharded
+    dispatch, ``FNOServer.step_fn``) and walk the jaxpr to assert the
+    fusion contract (pallas_call counts), cast ownership
+    (``convert_element_type`` only at the boundaries the active
+    ``PrecisionPolicy`` allows), and the collective budget (one ``psum``
+    per TP layer, zero all-gathers on the serve path).
+  * ``analysis.vmem`` — static VMEM-footprint estimator for the engine's
+    launches (scratch + operand bytes from the block-size table and
+    dtype), flagging over-budget configs before lowering.
+  * ``analysis.ast_lint`` — source lints: AST rules for the compat policy
+    (every ``pl.pallas_call`` through ``_compiler_params``, every
+    shard_map through ``compat_shard_map``, no raw ``jnp.fft`` on
+    production paths, no dtype literals outside allowlisted cast
+    boundaries) plus the config-registry audit (every seeded arch either
+    builds a cell or carries a non-empty skip_reason).
+
+``scripts/lint.py --all`` sweeps the full matrix (ranks 1-3 × weight
+layouts × fusion variants × f32/bf16 × DP/TP) and is wired into
+``scripts/check.sh`` and CI. This module stays import-light (no jax) so
+the AST layer can run anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation (or, at severity="warn", a flagged risk).
+
+    checker: short rule id (e.g. "pallas-count", "cast-ownership");
+    target: what was checked (an entry point, a file:line, a config id);
+    message: the pointed, human-actionable violation description.
+    """
+
+    checker: str
+    target: str
+    message: str
+    severity: str = "error"  # "error" fails the lint; "warn" is reported
+
+    def __str__(self) -> str:
+        tag = "WARN" if self.severity == "warn" else "FAIL"
+        return f"[{tag} {self.checker}] {self.target}: {self.message}"
+
+
+def errors(findings: Iterable[Finding]) -> List[Finding]:
+    return [f for f in findings if f.severity == "error"]
+
+
+def format_findings(findings: Iterable[Finding]) -> str:
+    return "\n".join(str(f) for f in findings)

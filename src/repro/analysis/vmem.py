@@ -1,0 +1,255 @@
+"""Static VMEM-footprint estimator for the fused engine's launches.
+
+Computes each engine launch's operand + scratch bytes from the block-size
+table (``kernels.ops._BLOCK_DEFAULTS``), the config's shapes, and the
+``PrecisionPolicy`` dtypes — BEFORE lowering, so an over-budget config is
+a lint finding instead of a Mosaic allocation failure mid-run.
+
+Shape model (mirrors ``kernels/engine.py`` exactly):
+
+  * grid-blocked operands and outputs (the x/w/y/wb/bias/gy windows) are
+    double-buffered by Mosaic → ×2 bytes;
+  * the DFT operand mats use constant index maps (same block every
+    program) and the VMEM accumulators are scratch → ×1;
+  * accumulators live at ``accum_dtype`` with the shapes the kernels
+    declare (``rev_modes+(bb,bo)`` per-mode, ``(bb,)+rev_modes+(bo)``
+    shared, plus the bypass scratch ``(bo,bb)+spatial`` for the block
+    epilogue).
+
+The estimate is deliberately a floor (it ignores Mosaic's own padding of
+sub-(8,128) tiles), so "over budget" findings are real. Severity policy:
+configs CI actually lowers (``reduced=True``) must fit → "error";
+full-size paper configs that exceed the budget are reported at "warn" —
+they are the motivating input for the block-size autotuner (ROADMAP
+item 3, DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.analysis import Finding
+from repro.configs.base import FNOConfig, PrecisionPolicy
+
+# Per-core VMEM on current TPU generations (v4/v5e/v5p are all 16 MiB;
+# interpret-mode CI has no such limit — the budget is about real TPUs).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchEstimate:
+    """Bytes resident in VMEM for one engine launch (one grid program)."""
+
+    launch: str        # block_fwd | gz_recompute | dx_adjoint | wgrad | core
+    operand_bytes: int  # double-buffered windows + single-buffered mats
+    scratch_bytes: int  # declared VMEM accumulators
+
+    @property
+    def total_bytes(self) -> int:
+        return self.operand_bytes + self.scratch_bytes
+
+
+def _isz(dtype: str) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _prod(xs: Sequence[int]) -> int:
+    return int(math.prod(xs))
+
+
+def _mats_bytes(mats) -> int:
+    return sum(int(m.size) * m.dtype.itemsize for m in mats)
+
+
+def resolve_blocks(rank: int, b: int, h: int, o: int,
+                   bb: int = 0, bo: int = 0, bh: int = 0
+                   ) -> Tuple[int, int, int]:
+    """The (bb, bo, bh) the ops layer would pick: per-rank defaults from
+    the block-size table, shrunk to the (8-aligned) actual dims."""
+    from repro.kernels.ops import _pick_block, _resolve_blocks
+    bb, bo, bh = _resolve_blocks(rank, bb, bo, bh)
+    return _pick_block(b, bb), _pick_block(o, bo), _pick_block(h, bh)
+
+
+def _rev_modes(modes: Sequence[int]) -> Tuple[int, ...]:
+    """Accumulator-order spectral extents, with the rank-1 lane-alignment
+    pad (``ops._mode_pad``) applied."""
+    from repro.kernels.ops import _mode_pad
+    kp = _mode_pad(modes)
+    return (kp,) if len(modes) == 1 else tuple(reversed(modes))
+
+
+def _fused_call_estimate(launch: str, spatial, modes, bb, bo, bh, per_mode,
+                         pol: PrecisionPolicy, *, with_epilogue: bool,
+                         with_gy: bool, out_dtype: Optional[str] = None,
+                         adjoint: bool = False) -> LaunchEstimate:
+    """One ``engine.fused_fnond_call`` program, block epilogue included."""
+    from repro.core import spectral
+    from repro.kernels.ops import _mode_pad
+
+    r = len(modes)
+    cb = _isz(pol.compute_dtype)
+    ab = _isz(pol.accum_dtype)
+    ob = _isz(out_dtype or pol.compute_dtype)
+    sp = _prod(spatial)
+    kp = _mode_pad(modes)
+    rev = _rev_modes(modes)
+    mats = spectral.fused_operand_mats(tuple(spatial), tuple(modes),
+                                       pol.spectral_dtype, adjoint, kp)
+    wmodes = _prod((kp,) if r == 1 else tuple(modes)) if per_mode else 1
+
+    operands = 2 * (bb * bh * sp * cb)                 # x window
+    operands += 2 * (2 * bo * bh * wmodes * cb)        # wr + wi windows
+    operands += _mats_bytes(mats)                      # constant-index mats
+    operands += 2 * (bb * bo * sp * ob)                # y window
+    if with_epilogue:
+        operands += 2 * (bo * bh * cb)                 # wb window
+        if not adjoint:
+            operands += 2 * (bo * 1 * cb)              # bias window
+    if with_gy:
+        operands += 2 * (bb * bo * sp * cb)            # gy window
+
+    acc = _prod(rev) * bb * bo * ab
+    scratch = 2 * acc                                  # accr + acci
+    if with_epilogue:
+        scratch += bo * bb * sp * ab                   # bypass accumulator
+    return LaunchEstimate(launch, operands, scratch)
+
+
+def _core_call_estimate(spatial, modes, bb, bo, bh, per_mode,
+                        pol: PrecisionPolicy) -> LaunchEstimate:
+    """One partial-fusion middle program (``fused_fnond_core_call``)."""
+    from repro.core import spectral
+
+    r = len(modes)
+    cb = _isz(pol.spectral_dtype)
+    ab = _isz(pol.accum_dtype)
+    nx = spatial[0]
+    spec = tuple(reversed(modes[1:]))  # K_R .. K_2
+    mats = spectral.fused_operand_mats(tuple(spatial), tuple(modes),
+                                       pol.spectral_dtype)
+    fr = mats[2 * r - 2]
+    kx = int(fr.shape[1])
+    core_mats = mats[2 * r - 2:2 * r + 2]
+    wmodes = _prod(modes) if per_mode else 1
+
+    z_elems = bb * bh * nx * _prod(spec)
+    y_elems = bb * bo * nx * _prod(spec)
+    operands = 2 * (2 * z_elems * cb)                  # zr + zi windows
+    operands += 2 * (2 * bo * bh * wmodes * cb)        # wr + wi windows
+    operands += _mats_bytes(core_mats)                 # f/g operand pairs
+    operands += 2 * (2 * y_elems * cb)                 # yr + yi windows
+    scratch = 2 * (_prod(spec) * kx * bb * bo * ab)
+    return LaunchEstimate("core", operands, scratch)
+
+
+def _wgrad_estimate(spatial, modes, bb, bo, bh, per_mode,
+                    pol: PrecisionPolicy, *,
+                    with_bypass: bool) -> LaunchEstimate:
+    """One fused weight-gradient program (``fused_fnond_wgrad_call``)."""
+    from repro.core import spectral
+    from repro.kernels.ops import _mode_pad
+
+    cb = _isz(pol.compute_dtype)
+    ab = _isz(pol.accum_dtype)
+    pb = _isz(pol.param_dtype)
+    sp = _prod(spatial)
+    kp = _mode_pad(modes)
+    rev = _rev_modes(modes)
+    mats = spectral.wgrad_operand_mats(tuple(spatial), tuple(modes),
+                                       pol.spectral_dtype, kp)
+    dw_elems = (_prod(rev) if per_mode else 1) * bo * bh
+
+    operands = 2 * (bb * bh * sp * cb)                 # x window
+    operands += 2 * (bb * bo * sp * cb)                # gz window
+    operands += _mats_bytes(mats)
+    operands += 2 * (2 * dw_elems * pb)                # dwr + dwi windows
+    if with_bypass:
+        operands += 2 * ((bo * bh + bo) * pb)          # dwb + dbias windows
+    scratch = 2 * (dw_elems * ab)
+    if with_bypass:
+        scratch += (bo * bh + bo) * ab
+    return LaunchEstimate("wgrad", operands, scratch)
+
+
+def block_launch_estimates(cfg_or_shapes, *, variant: str = "full",
+                           batch: int = 8,
+                           policy: Optional[PrecisionPolicy] = None
+                           ) -> Dict[str, LaunchEstimate]:
+    """Per-launch VMEM estimates for one fused FNO block's full training
+    step (forward + the three backward kernels).
+
+    Accepts an ``FNOConfig`` (hidden/modes/spatial/weight_mode read off
+    it) or a ``(hidden, spatial, modes, per_mode)`` tuple.
+    """
+    if isinstance(cfg_or_shapes, FNOConfig):
+        cfg = cfg_or_shapes
+        h, spatial, modes = cfg.hidden, cfg.spatial, cfg.modes
+        per_mode = cfg.weight_mode == "per_mode"
+        pol = policy or cfg.precision
+    else:
+        h, spatial, modes, per_mode = cfg_or_shapes
+        pol = policy or PrecisionPolicy()
+    o, r = h, len(modes)
+    bb, bo, bh = resolve_blocks(r, batch, h, o)
+    full = variant == "full" or r == 1
+
+    est: Dict[str, LaunchEstimate] = {}
+    if full:
+        est["block_fwd"] = _fused_call_estimate(
+            "block_fwd", spatial, modes, bb, bo, bh, per_mode, pol,
+            with_epilogue=True, with_gy=False)
+    else:
+        est["core"] = _core_call_estimate(spatial, modes, bb, bo, bh,
+                                          per_mode, pol)
+    # Backward is always the fully fused adjoint (one linear map serves
+    # both variants — ops._fno_block_vjp_bwd).
+    est["gz_recompute"] = _fused_call_estimate(
+        "gz_recompute", spatial, modes, bb, bo, bh, per_mode, pol,
+        with_epilogue=True, with_gy=True)
+    est["dx_adjoint"] = _fused_call_estimate(
+        "dx_adjoint", spatial, modes, bb, bo, bh, per_mode, pol,
+        with_epilogue=True, with_gy=False, adjoint=True)
+    est["wgrad"] = _wgrad_estimate(spatial, modes, bb, bo, bh, per_mode,
+                                   pol, with_bypass=True)
+    return est
+
+
+def check_vmem(configs=None, dtypes: Sequence[str] = ("f32", "bf16"),
+               variants: Sequence[str] = ("full", "partial"),
+               budget: int = VMEM_BUDGET_BYTES) -> List[Finding]:
+    """Estimate every engine launch of the given configs against the VMEM
+    budget. configs: (cfg, must_fit) pairs; defaults to all FNO archs at
+    reduced (must_fit=True — CI lowers these) and full size (must_fit=
+    False → warn: the block-size autotuner work item owns shrinking
+    them)."""
+    from repro.configs import FNO_IDS, get_config
+
+    if configs is None:
+        configs = [(get_config(a, reduced=True), True) for a in FNO_IDS]
+        configs += [(get_config(a, reduced=False), False) for a in FNO_IDS]
+
+    findings: List[Finding] = []
+    for (cfg, must_fit) in configs:
+        for dtype in dtypes:
+            pol = PrecisionPolicy.from_name(dtype)
+            for variant in variants:
+                ests = block_launch_estimates(cfg, variant=variant,
+                                              policy=pol)
+                for name, e in ests.items():
+                    if e.total_bytes <= budget:
+                        continue
+                    findings.append(Finding(
+                        "vmem-budget",
+                        f"{cfg.name}/{variant}/{dtype}/{name}",
+                        f"estimated {e.total_bytes / 2**20:.1f} MiB VMEM "
+                        f"per program ({e.operand_bytes / 2**20:.1f} operand"
+                        f" + {e.scratch_bytes / 2**20:.1f} scratch) exceeds "
+                        f"the {budget / 2**20:.0f} MiB budget — shrink "
+                        f"(bb,bo,bh) or split the launch (ROADMAP: "
+                        f"block-size autotuner)",
+                        severity="error" if must_fit else "warn"))
+    return findings

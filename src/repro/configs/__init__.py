@@ -74,7 +74,11 @@ def skip_reason(arch: str, shape: str) -> Optional[str]:
 
 
 def runnable_cells() -> Iterator[Tuple[str, str, Optional[str]]]:
-    """Yield (arch, shape, skip_reason) for all 40 assigned cells."""
-    for arch in ARCH_IDS:
+    """Yield (arch, shape, skip_reason) for every seeded (arch × shape)
+    cell — the 40 assigned LM cells AND the FNO archs (56 total), so no
+    config can exist without either a runnable cell or a stated skip
+    reason (the contract ``analysis.ast_lint.check_config_registry``
+    enforces)."""
+    for arch in ALL_IDS:
         for shape in SHAPES:
             yield arch, shape, skip_reason(arch, shape)

@@ -53,16 +53,19 @@ def gpipe_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
 
 def make_gpipe_fn(stage_fn, *, mesh: Mesh, axis: str, num_stages: int,
                   stage_param_spec, x_spec):
-    """shard_map wrapper: returns f(stacked_stage_params, x_mb) -> out."""
-    from jax.experimental.shard_map import shard_map
+    """shard_map wrapper: returns f(stacked_stage_params, x_mb) -> out.
+
+    Goes through compat_shard_map (the check_rep→check_vma shim, which
+    also disables the replication check this schedule needs off — only
+    the last stage's outputs are real)."""
+    from repro.distributed.sharding import compat_shard_map
 
     def inner(params, x_mb):
         y = gpipe_forward(stage_fn, params, x_mb, axis=axis,
                           num_stages=num_stages)
         return y
 
-    return shard_map(
-        inner, mesh=mesh,
+    return compat_shard_map(
+        inner, mesh,
         in_specs=(stage_param_spec, x_spec),
-        out_specs=x_spec,
-        check_rep=False)
+        out_specs=x_spec)

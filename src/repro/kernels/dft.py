@@ -17,9 +17,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _compiler_params
 
 _F32 = jnp.float32
+
+# 1-D grid over independent row-tiles — no cross-program accumulation.
+_SEMANTICS = ("parallel",)
 
 
 def _rdft_kernel(x_ref, cr_ref, ci_ref, xr_ref, xi_ref):
@@ -52,6 +56,7 @@ def _rdft_call(x2d: jax.Array, cr: jax.Array, ci: jax.Array,
         in_specs=[spec_x, spec_m, spec_m],
         out_specs=[spec_o, spec_o],
         out_shape=[out_sd, out_sd],
+        compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
     )(x2d, cr, ci)
 
@@ -83,6 +88,7 @@ def _cdft_call(xr2d: jax.Array, xi2d: jax.Array, fr: jax.Array,
         in_specs=[spec_x, spec_x, spec_m, spec_m],
         out_specs=[spec_o, spec_o],
         out_shape=[out_sd, out_sd],
+        compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
     )(xr2d, xi2d, fr, fi)
 
@@ -102,5 +108,6 @@ def _irdft_call(xr2d: jax.Array, xi2d: jax.Array, er: jax.Array, ei: jax.Array,
         in_specs=[spec_x, spec_x, spec_m, spec_m],
         out_specs=spec_o,
         out_shape=jax.ShapeDtypeStruct((m, n), xr2d.dtype),
+        compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),
         interpret=interpret,
     )(xr2d, xi2d, er, ei)

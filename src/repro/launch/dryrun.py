@@ -19,7 +19,7 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
-from repro.configs import ALL_IDS, ARCH_IDS, FNO_IDS, SHAPES, skip_reason  # noqa: E402
+from repro.configs import ALL_IDS, SHAPES, skip_reason  # noqa: E402
 from repro.launch import cells as cells_mod  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.roofline import analysis as roof  # noqa: E402
@@ -97,8 +97,7 @@ def main() -> int:
     if args.mesh in ("multi", "both"):
         meshes.append(("multi(2x16x16)", make_production_mesh(multi_pod=True)))
 
-    archs = [args.arch] if args.arch else list(ARCH_IDS) + ["fno1d", "fno2d",
-                                                            "fno3d"]
+    archs = [args.arch] if args.arch else list(ALL_IDS)
     shapes = [args.shape] if args.shape else list(SHAPES)
 
     records, failures = [], []

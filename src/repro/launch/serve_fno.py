@@ -27,7 +27,6 @@ from repro.configs.fno import with_precision
 from repro.core import fno as fno_mod
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_compat_mesh
-from repro.roofline.hlo_counter import count_pallas_calls
 from repro.train import serve_fno_step as sfs
 
 
@@ -90,14 +89,13 @@ def run(args) -> dict:
     # pallas_call per FNO layer on the fused-block path, even through the
     # shard_map dispatch. Only the full-fusion variant makes this promise —
     # the paper-faithful partial variant legitimately runs a multi-kernel
-    # spectral pipeline per layer.
+    # spectral pipeline per layer. Checked through the contract-linter
+    # framework (the same checker scripts/lint.py --trace sweeps).
     if fuse and args.variant == "full":
-        xb = jnp.zeros((server.buckets[0], cfg.in_channels)
-                       + tuple(cfg.spatial), jnp.float32)
-        n_k = count_pallas_calls(server.step_fn, params, {"x": xb})
-        assert n_k == cfg.num_layers, (
-            f"fused serve step traced {n_k} pallas_calls, "
-            f"want {cfg.num_layers} (one per layer)")
+        from repro.analysis import format_findings
+        from repro.analysis.jaxpr_lint import serve_step_contract
+        findings = serve_step_contract(server, cfg)
+        assert not findings, format_findings(findings)
 
     rng = np.random.default_rng(0)
     sizes = rng.integers(1, args.max_batch + 1, size=args.requests)

@@ -1,0 +1,25 @@
+"""Version-compat shims for XLA's compiled-executable introspection APIs.
+
+One home for the ``compiled.cost_analysis()`` list-vs-dict normalization
+(ROADMAP.md §JAX version compat): on jax 0.4.x it returns a list of dicts
+(one per partitioned module), on newer releases a single dict. Every call
+site goes through :func:`cost_analysis_dict` instead of normalizing
+inline.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as one flat dict on any supported JAX.
+
+    jax 0.4.x returns ``[{...}]`` (list of per-module dicts; the entry
+    module is first), ≥0.5 returns ``{...}``. An empty list (seen for
+    trivially-empty modules) normalizes to ``{}`` so callers can
+    ``.get(...)`` unconditionally.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)

@@ -271,30 +271,36 @@ def count(hlo_text: str) -> Counts:
 
 
 # ---------------------------------------------------------------------------
-# Trace-level (jaxpr) primitive counting. Interpret-mode pallas_calls lower
-# to plain HLO ops, so the kernel-launch regression guard ("one FNO block ==
-# one pallas_call", scripts/fused_block_smoke.py) must count at the jaxpr
-# level, recursing through pjit / custom_vjp / scan sub-jaxprs. Duck-typed
-# (hasattr) rather than imported so it survives the jax.core →
-# jax.extend.core migration (ROADMAP.md §JAX version compat).
+# Trace-level (jaxpr) primitive iteration/counting. Interpret-mode
+# pallas_calls lower to plain HLO ops, so the kernel-launch regression guard
+# ("one FNO block == one pallas_call", analysis/jaxpr_lint.py) must count at
+# the jaxpr level, recursing through pjit / custom_vjp / scan / shard_map
+# sub-jaxprs. Duck-typed (hasattr) rather than imported so it survives the
+# jax.core → jax.extend.core migration (ROADMAP.md §JAX version compat).
 # ---------------------------------------------------------------------------
-def _jaxpr_prim_counts(jaxpr, out, into_kernels) -> None:
+def iter_jaxpr_eqns(jaxpr, into_kernels: bool = True):
+    """Yield every eqn of `jaxpr` and of all nested sub-jaxprs (pjit
+    bodies, custom_vjp branches, scans, shard_map). into_kernels=False
+    stops at pallas_call boundaries: the yielded stream is the
+    LAUNCH-level op sequence (each pallas_call appears once; its kernel
+    body is not expanded) — the level at which the fusion, cast-ownership,
+    and collective contracts are stated (analysis/jaxpr_lint.py)."""
     for eqn in jaxpr.eqns:
-        out[eqn.primitive.name] = out.get(eqn.primitive.name, 0) + 1
+        yield eqn
         if eqn.primitive.name == "pallas_call" and not into_kernels:
             continue
         for v in eqn.params.values():
-            _sub_counts(v, out, into_kernels)
+            yield from _iter_sub(v, into_kernels)
 
 
-def _sub_counts(v, out, into_kernels) -> None:
+def _iter_sub(v, into_kernels):
     if hasattr(v, "jaxpr") and hasattr(v, "consts"):  # ClosedJaxpr
-        _jaxpr_prim_counts(v.jaxpr, out, into_kernels)
+        yield from iter_jaxpr_eqns(v.jaxpr, into_kernels)
     elif hasattr(v, "eqns"):  # Jaxpr
-        _jaxpr_prim_counts(v, out, into_kernels)
+        yield from iter_jaxpr_eqns(v, into_kernels)
     elif isinstance(v, (list, tuple)):
         for x in v:
-            _sub_counts(x, out, into_kernels)
+            yield from _iter_sub(x, into_kernels)
 
 
 def jaxpr_primitive_counts(fn, *args, into_kernels: bool = True,
@@ -306,8 +312,9 @@ def jaxpr_primitive_counts(fn, *args, into_kernels: bool = True,
     kernel body is not expanded), the fusion claim's "kernel calls"."""
     import jax
     counts: Dict[str, int] = {}
-    _jaxpr_prim_counts(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr, counts,
-                       into_kernels)
+    for eqn in iter_jaxpr_eqns(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr,
+                               into_kernels):
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
     return counts
 
 

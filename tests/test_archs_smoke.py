@@ -71,8 +71,11 @@ def test_prefill_decode_consistency(arch):
 
 
 def test_cell_grid_and_skips():
+    # 10 LM archs + 4 FNO archs, 4 shapes each — EVERY seeded config is
+    # enumerated (the registry audit contract,
+    # analysis.ast_lint.check_config_registry).
     cells = list(runnable_cells())
-    assert len(cells) == 40
+    assert len(cells) == 56
     skips = [(a, s) for a, s, r in cells if r]
     assert ("hubert-xlarge", "decode_32k") in skips
     assert ("hubert-xlarge", "long_500k") in skips
@@ -84,6 +87,14 @@ def test_cell_grid_and_skips():
         if a in ("mamba2-370m", "hymba-1.5b", "mixtral-8x7b", "gemma3-27b") \
                 and s == "long_500k":
             assert r is None
+    # FNO archs (fno2d-large included): train + batched-serve cells run,
+    # decode shapes carry a reason
+    by = {(a, s): r for a, s, r in cells}
+    for a in ("fno1d", "fno2d", "fno2d-large", "fno3d"):
+        assert by[(a, "train_4k")] is None
+        assert by[(a, "prefill_32k")] is None
+        assert by[(a, "decode_32k")]
+        assert by[(a, "long_500k")]
 
 
 @pytest.mark.parametrize("arch,target_b", [

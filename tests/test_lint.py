@@ -1,0 +1,293 @@
+"""Contract-linter tests (ISSUE 6): the clean repo passes every checker,
+and mutation-style fixtures that deliberately violate each contract make
+exactly the targeted checker fire with a pointed message."""
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import ast_lint, errors, jaxpr_lint, vmem
+from repro.configs import get_config
+from repro.configs.base import FNOConfig, PrecisionPolicy
+from repro.kernels import ops
+
+MODES2 = (3, 4)
+
+
+def _block_args(dtype="f32"):
+    return jaxpr_lint.block_args(2, "shared", dtype)
+
+
+def _block(policy):
+    return lambda *a: ops.fno_block_nd(*a, MODES2, path="pallas",
+                                       variant="full", policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# clean repo: every layer passes
+# ---------------------------------------------------------------------------
+def test_ast_lints_clean_on_repo():
+    assert ast_lint.run_ast_lints() == []
+
+
+def test_config_registry_clean():
+    assert ast_lint.check_config_registry() == []
+
+
+def test_block_matrix_subset_clean():
+    fs = jaxpr_lint.lint_block_matrix(ranks=(2,), layouts=("shared",),
+                                      variants=("full",), dtypes=("f32",))
+    assert fs == []
+
+
+def test_fused_block_contract_wrapper_clean():
+    assert jaxpr_lint.fused_block_contract() == []
+
+
+def test_vmem_reduced_configs_fit():
+    cfgs = [(get_config(a, reduced=True), True)
+            for a in ("fno1d", "fno2d", "fno3d")]
+    assert errors(vmem.check_vmem(configs=cfgs)) == []
+
+
+def test_vmem_full_size_configs_warn_not_error():
+    fs = vmem.check_vmem(configs=[(get_config("fno3d"), False)])
+    assert fs and errors(fs) == []
+    assert all(f.severity == "warn" for f in fs)
+
+
+def test_sharded_and_serve_lints_clean(subproc):
+    subproc("""
+    import sys
+    sys.path.insert(0, {src!r})
+    from repro.analysis import format_findings, jaxpr_lint
+    fs = jaxpr_lint.lint_sharded_blocks(mesh_grids=((4, 2), (8, 1)),
+                                        dtypes=("f32",))
+    fs += jaxpr_lint.lint_serve(mesh_grids=((4, 2),), dtypes=("f32",))
+    assert not fs, format_findings(fs)
+    print("sharded+serve lints OK")
+    """.format(src=os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")))
+
+
+# ---------------------------------------------------------------------------
+# trace-lint mutations: each contract violation makes its checker fire
+# ---------------------------------------------------------------------------
+def test_mutation_split_pallas_call_fires_count_checker():
+    pol = PrecisionPolicy.from_name("f32")
+    blk = _block(pol)
+    args = _block_args()
+
+    def doubled(*a):  # a second kernel launch where the contract wants one
+        return blk(*a) + blk(*a)
+
+    fs = jaxpr_lint.check_pallas_count(doubled, args, 1, target="mutant")
+    assert len(fs) == 1 and fs[0].checker == "pallas-count"
+    assert "traced 2 pallas_calls, want exactly 1" in fs[0].message
+    # the clean block passes the same checker
+    assert jaxpr_lint.check_pallas_count(blk, args, 1, target="ok") == []
+
+
+def test_mutation_stray_cast_fires_cast_checker():
+    pol = PrecisionPolicy.from_name("f32")
+    blk = _block(pol)
+    args = _block_args()
+
+    def leaky(*a):  # a stray down-cast the f32 policy does not own
+        return blk(*a).astype(jnp.bfloat16)
+
+    fs = jaxpr_lint.check_cast_ownership(leaky, args, pol, target="mutant")
+    assert len(fs) == 1 and fs[0].checker == "cast-ownership"
+    assert "float32->bfloat16" in fs[0].message
+    assert jaxpr_lint.check_cast_ownership(blk, args, pol, target="ok") == []
+
+
+def test_bf16_policy_allows_its_boundary_casts():
+    pol = PrecisionPolicy.from_name("bf16")
+    blk = _block(pol)
+    args = jaxpr_lint.block_args(2, "shared", "bf16")
+    assert jaxpr_lint.check_cast_ownership(blk, args, pol, target="ok") == []
+
+
+def test_mutation_doubled_psum_fires_collective_checker():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    from repro.launch.mesh import make_compat_mesh
+
+    mesh = make_compat_mesh((1, 1), ("data", "model"))
+    x = jnp.zeros((4, 4))
+
+    def once(xl):
+        return jax.lax.psum(xl, "model")
+
+    def twice(xl):  # one psum over budget
+        return jax.lax.psum(jax.lax.psum(xl, "model"), "model")
+
+    fn1 = compat_shard_map(once, mesh, in_specs=(P(),), out_specs=P())
+    fn2 = compat_shard_map(twice, mesh, in_specs=(P(),), out_specs=P())
+    assert jaxpr_lint.check_collective_budget(fn1, (x,), psums=1,
+                                              target="ok") == []
+    fs = jaxpr_lint.check_collective_budget(fn2, (x,), psums=1,
+                                            target="mutant")
+    assert len(fs) == 1 and fs[0].checker == "collective-budget"
+    assert "traced 2 psum(s), want exactly 1" in fs[0].message
+
+
+def test_mutation_foreign_collective_fires_collective_checker():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    from repro.launch.mesh import make_compat_mesh
+
+    mesh = make_compat_mesh((1,), ("data",))
+    x = jnp.zeros((4, 4))
+
+    def gathers(xl):
+        return jax.lax.all_gather(xl, "data")
+
+    fn = compat_shard_map(gathers, mesh, in_specs=(P(),), out_specs=P(None))
+    fs = jaxpr_lint.check_collective_budget(fn, (x,), psums=0,
+                                            target="mutant")
+    assert len(fs) == 1
+    assert "all_gather" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# AST-lint mutations (tmp files, scanned with the tmp dir as root)
+# ---------------------------------------------------------------------------
+def _lint_snippet(tmp_path, rel, code):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code))
+    return ast_lint.run_ast_lints(root=tmp_path)
+
+
+def test_mutation_raw_shard_map_import_fires(tmp_path):
+    fs = _lint_snippet(tmp_path, "distributed/rogue.py", """
+        from jax.experimental.shard_map import shard_map
+        """)
+    assert len(fs) == 1 and fs[0].checker == "compat-shard-map"
+    assert "compat_shard_map" in fs[0].message
+    assert fs[0].target == "distributed/rogue.py:2"
+
+
+def test_shard_map_home_is_exempt(tmp_path):
+    fs = _lint_snippet(tmp_path, "distributed/sharding.py", """
+        from jax.experimental.shard_map import shard_map
+        """)
+    assert fs == []
+
+
+def test_mutation_bare_pallas_call_fires(tmp_path):
+    fs = _lint_snippet(tmp_path, "kernels/rogue.py", """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def call(x):
+            return pl.pallas_call(lambda i, o: None, grid=(1,),
+                                  out_shape=x)(x)
+        """)
+    assert len(fs) == 1 and fs[0].checker == "pallas-compiler-params"
+    assert "_compiler_params" in fs[0].message
+
+
+def test_pallas_call_through_shim_passes(tmp_path):
+    fs = _lint_snippet(tmp_path, "kernels/fine.py", """
+        from jax.experimental import pallas as pl
+        from repro.kernels import _compiler_params
+
+        def call(x):
+            return pl.pallas_call(
+                lambda i, o: None, grid=(1,), out_shape=x,
+                compiler_params=_compiler_params(
+                    dimension_semantics=("parallel",)))(x)
+        """)
+    assert fs == []
+
+
+def test_mutation_raw_fft_fires(tmp_path):
+    fs = _lint_snippet(tmp_path, "kernels/rogue_fft.py", """
+        import jax.numpy as jnp
+
+        def fwd(x):
+            return jnp.fft.rfft(x, axis=-1)
+        """)
+    assert len(fs) == 1 and fs[0].checker == "no-raw-fft"
+
+
+def test_mutation_dtype_literal_fires_and_pragma_allows(tmp_path):
+    bad = _lint_snippet(tmp_path, "kernels/ops.py", """
+        import jax.numpy as jnp
+
+        def sneaky(x):
+            return x.astype(jnp.float32)
+        """)
+    assert len(bad) == 1 and bad[0].checker == "dtype-literal"
+    assert "sneaky" in bad[0].message
+
+    ok = _lint_snippet(tmp_path, "kernels/ops.py", """
+        import jax.numpy as jnp
+
+        def sneaky(x):
+            return x.astype(jnp.float32)  # lint: allow-dtype
+        """)
+    assert ok == []
+
+
+def test_dtype_literal_ignored_outside_scope(tmp_path):
+    fs = _lint_snippet(tmp_path, "models/free.py", """
+        import jax.numpy as jnp
+
+        def fine(x):
+            return x.astype(jnp.float32)
+        """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# registry + vmem mutations
+# ---------------------------------------------------------------------------
+def test_mutation_registry_gap_fires(monkeypatch):
+    import repro.configs as configs
+
+    real = list(configs.runnable_cells())
+
+    def with_empty_reason():  # skipped cell with a blank reason
+        yield from real[:-1]
+        a, s, _ = real[-1]
+        yield a, s, "   "
+
+    monkeypatch.setattr(configs, "runnable_cells", with_empty_reason)
+    fs = ast_lint.check_config_registry()
+    assert any(f.checker == "config-registry" and "EMPTY" in f.message
+               for f in fs)
+
+    def missing_arch():  # an arch the grid never enumerates
+        yield from (row for row in real if row[0] != "fno2d-large")
+
+    monkeypatch.setattr(configs, "runnable_cells", missing_arch)
+    fs = ast_lint.check_config_registry()
+    assert any(f.target == "fno2d-large"
+               and "never enumerated" in f.message for f in fs)
+
+
+def test_mutation_oversized_launch_fires_vmem_checker():
+    big = FNOConfig(name="fno2d-absurd", ndim=2, hidden=512, num_layers=1,
+                    in_channels=1, out_channels=1, spatial=(256, 256),
+                    modes=(64, 64), weight_mode="per_mode")
+    fs = vmem.check_vmem(configs=[(big, True)], dtypes=("f32",),
+                         variants=("full",))
+    assert fs and all(f.checker == "vmem-budget" for f in fs)
+    assert errors(fs), "must-fit config over budget must be an error"
+
+
+def test_launch_estimates_report_all_kernels():
+    est = vmem.block_launch_estimates(get_config("fno2d", reduced=True))
+    assert set(est) == {"block_fwd", "gz_recompute", "dx_adjoint", "wgrad"}
+    assert all(e.total_bytes > 0 for e in est.values())
+    part = vmem.block_launch_estimates(get_config("fno2d", reduced=True),
+                                       variant="partial")
+    assert "core" in part and "block_fwd" not in part
