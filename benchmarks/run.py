@@ -18,7 +18,11 @@ def main() -> None:
                     help="small sweeps (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: prune,kernels,fft_opt,"
-                         "fusion,e2e,serve,train")
+                         "fusion,e2e,serve,train,tuned")
+    ap.add_argument("--autotune", action="store_true",
+                    help="regenerate the tuned block-plan cache "
+                         "(scripts/autotune.py) before benchmarking, so "
+                         "the tuned rows measure fresh winners")
     ap.add_argument("--ranks", default="1,2,3",
                     help="spatial ranks for the train rank sweep "
                          "(e.g. --ranks 3 tracks only the 3D path)")
@@ -31,6 +35,11 @@ def main() -> None:
         ap.error(f"--ranks must be a comma-separated subset of 1,2,3 "
                  f"(got {args.ranks!r})")
 
+    if args.autotune:
+        from repro.tuning import autotune
+        autotune.tune(measure="auto" if not args.quick else "none")
+        print()
+
     from benchmarks import (bench_e2e, bench_fft_opt, bench_fusion,
                             bench_kernels, bench_prune, bench_train)
     table = {
@@ -41,11 +50,12 @@ def main() -> None:
         "e2e": lambda: bench_e2e.run(args.quick),
         "serve": lambda: bench_e2e.run_serve(args.quick),
         "train": lambda: bench_train.run(args.quick, ranks=ranks),
+        "tuned": lambda: bench_e2e.run_tuned(args.quick),
     }
-    # "e2e" already includes the serving rows; don't run them twice on a
-    # full sweep.
+    # "e2e" already includes the serving AND tuned rows; don't run them
+    # twice on a full sweep.
     only = args.only.split(",") if args.only else \
-        [k for k in table if k != "serve"]
+        [k for k in table if k not in ("serve", "tuned")]
     for name in only:
         table[name]()
         print()

@@ -14,10 +14,15 @@ python scripts/fused_block_smoke.py
 # sharded dispatch and that every served output is finite.
 python -m repro.launch.serve --arch fno2d --reduced --requests 2 \
   --max-batch 2
-# Contract lint (ISSUE 6): AST rules, config-registry audit, static VMEM
-# estimates, and the jaxpr trace lints (pallas counts / cast ownership /
-# collective budget) over the whole config matrix. Pure tracing + AST —
-# no kernels execute.
+# Autotuner smoke (ISSUE 7): the generate -> VMEM-prune -> persist
+# pipeline over the reduced shapes into a throwaway cache, then the
+# staleness lint over it. Pure python byte-model math — seconds, no jax.
+python scripts/autotune.py --smoke
+# Contract lint (ISSUE 6/7): AST rules, config-registry audit, static
+# VMEM estimates (tuned plans, error severity), tuned-cache staleness,
+# and the jaxpr trace lints (pallas counts / cast ownership / collective
+# budget) over the whole config matrix. Pure tracing + AST — no kernels
+# execute.
 python scripts/lint.py --all
 # Collection gate: when pytest selection args (-k/-m/paths) could deselect
 # a broken module, a full collect-only pass must still fail the script on

@@ -13,6 +13,9 @@ Sweeps the repo's machine-checked design contracts:
               collective budget over ranks 1-3 × weight layouts × fusion
               variants × f32/bf16 × DP/TP (needs the 8 virtual devices
               this script forces below)
+  --tuning    tuned block-plan cache staleness/integrity: engine
+              signature, VMEM budget, key schema, and a probe-shape
+              refit of every committed winner (repro.tuning.store)
   --all       everything above (what scripts/check.sh and CI run)
 
 Exit status is the number of error-severity findings (capped at 1);
@@ -37,11 +40,12 @@ def main() -> int:
     ap.add_argument("--registry", action="store_true")
     ap.add_argument("--vmem", action="store_true")
     ap.add_argument("--trace", action="store_true")
+    ap.add_argument("--tuning", action="store_true")
     args = ap.parse_args()
     if not (args.all or args.ast or args.registry or args.vmem
-            or args.trace):
+            or args.trace or args.tuning):
         ap.error("pick at least one of --all/--ast/--registry/--vmem/"
-                 "--trace")
+                 "--trace/--tuning")
 
     from repro.analysis import errors, format_findings
 
@@ -65,6 +69,12 @@ def main() -> int:
         nw = sum(1 for f in fs if f.severity == "warn")
         print(f"vmem estimates: {len(errors(fs))} error(s), "
               f"{nw} warn(s)")
+        findings += fs
+
+    if args.all or args.tuning:
+        from repro.tuning import check_tuning_cache
+        fs = check_tuning_cache()
+        print(f"tuning cache: {len(errors(fs))} error(s)")
         findings += fs
 
     if args.all or args.trace:

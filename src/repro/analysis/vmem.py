@@ -1,9 +1,12 @@
 """Static VMEM-footprint estimator for the fused engine's launches.
 
-Computes each engine launch's operand + scratch bytes from the block-size
-table (``kernels.ops._BLOCK_DEFAULTS``), the config's shapes, and the
-``PrecisionPolicy`` dtypes — BEFORE lowering, so an over-budget config is
-a lint finding instead of a Mosaic allocation failure mid-run.
+Computes each engine launch's operand + scratch bytes from the resolved
+block plans (``repro.tuning.resolve_launch_plans`` — tuned cache with the
+static ``kernels.ops._BLOCK_DEFAULTS`` as fallback), the config's shapes,
+and the ``PrecisionPolicy`` dtypes — BEFORE lowering, so an over-budget
+config is a lint finding instead of a Mosaic allocation failure mid-run.
+The estimator is also the autotuner's pruning oracle
+(``launch_estimate`` scores one candidate triple for one launch kind).
 
 Shape model (mirrors ``kernels/engine.py`` exactly):
 
@@ -17,11 +20,11 @@ Shape model (mirrors ``kernels/engine.py`` exactly):
     epilogue).
 
 The estimate is deliberately a floor (it ignores Mosaic's own padding of
-sub-(8,128) tiles), so "over budget" findings are real. Severity policy:
-configs CI actually lowers (``reduced=True``) must fit → "error";
-full-size paper configs that exceed the budget are reported at "warn" —
-they are the motivating input for the block-size autotuner (ROADMAP
-item 3, DESIGN.md §7).
+sub-(8,128) tiles), so "over budget" findings are real. Severity policy
+(since the autotuner landed): EVERY config — reduced and full-size — must
+resolve plans that fit, at error severity. A full-size config erroring
+here means the committed tuned cache (``tuning/cache/blocks.json``) lost
+coverage for its shape class; regenerate with ``scripts/autotune.py``.
 """
 from __future__ import annotations
 
@@ -175,46 +178,95 @@ def _wgrad_estimate(spatial, modes, bb, bo, bh, per_mode,
     return LaunchEstimate("wgrad", operands, scratch)
 
 
+def _norm_shapes(cfg_or_shapes, policy):
+    """(hidden, spatial, modes, per_mode, policy) from an FNOConfig or a
+    ``(hidden, spatial, modes, per_mode)`` tuple."""
+    if isinstance(cfg_or_shapes, FNOConfig):
+        cfg = cfg_or_shapes
+        return (cfg.hidden, tuple(cfg.spatial), tuple(cfg.modes),
+                cfg.weight_mode == "per_mode", policy or cfg.precision)
+    h, spatial, modes, per_mode = cfg_or_shapes
+    return (int(h), tuple(spatial), tuple(modes), bool(per_mode),
+            policy or PrecisionPolicy())
+
+
+def launch_estimate(cfg_or_shapes, launch: str,
+                    triple: Tuple[int, int, int], *, batch: int = 8,
+                    policy: Optional[PrecisionPolicy] = None
+                    ) -> LaunchEstimate:
+    """Estimate ONE launch kind under an explicit (bb, bo, bh) block
+    preference — the autotuner's pruning oracle and the cache staleness
+    re-check. The preference is clamped to the actual dims exactly like
+    the ops layer does at call time (``ops._pick_block``). dx_adjoint
+    runs with hidden/out swapped in the real kernel; o == h throughout
+    this repo's FNO stacks, so the unswapped estimate is exact."""
+    from repro.kernels.ops import _pick_block
+
+    h, spatial, modes, per_mode, pol = _norm_shapes(cfg_or_shapes, policy)
+    o = h
+    bb = _pick_block(batch, triple[0])
+    bo = _pick_block(o, triple[1])
+    bh = _pick_block(h, triple[2])
+    if launch == "core":
+        return _core_call_estimate(spatial, modes, bb, bo, bh, per_mode,
+                                   pol)
+    if launch == "wgrad":
+        return _wgrad_estimate(spatial, modes, bb, bo, bh, per_mode, pol,
+                               with_bypass=True)
+    if launch == "block_fwd":
+        return _fused_call_estimate(
+            "block_fwd", spatial, modes, bb, bo, bh, per_mode, pol,
+            with_epilogue=True, with_gy=False)
+    if launch == "gz_recompute":
+        return _fused_call_estimate(
+            "gz_recompute", spatial, modes, bb, bo, bh, per_mode, pol,
+            with_epilogue=True, with_gy=True)
+    if launch == "dx_adjoint":
+        return _fused_call_estimate(
+            "dx_adjoint", spatial, modes, bb, bo, bh, per_mode, pol,
+            with_epilogue=True, with_gy=False, adjoint=True)
+    raise ValueError(f"unknown launch kind {launch!r}")
+
+
 def block_launch_estimates(cfg_or_shapes, *, variant: str = "full",
                            batch: int = 8,
-                           policy: Optional[PrecisionPolicy] = None
-                           ) -> Dict[str, LaunchEstimate]:
+                           policy: Optional[PrecisionPolicy] = None,
+                           plans=None) -> Dict[str, LaunchEstimate]:
     """Per-launch VMEM estimates for one fused FNO block's full training
     step (forward + the three backward kernels).
 
     Accepts an ``FNOConfig`` (hidden/modes/spatial/weight_mode read off
-    it) or a ``(hidden, spatial, modes, per_mode)`` tuple.
+    it) or a ``(hidden, spatial, modes, per_mode)`` tuple. ``plans``
+    (a ``tuning.LaunchPlans``) pins the block preferences explicitly;
+    None resolves them the same way the ops layer will at call time —
+    tuned cache first, static defaults as fallback.
     """
-    if isinstance(cfg_or_shapes, FNOConfig):
-        cfg = cfg_or_shapes
-        h, spatial, modes = cfg.hidden, cfg.spatial, cfg.modes
-        per_mode = cfg.weight_mode == "per_mode"
-        pol = policy or cfg.precision
-    else:
-        h, spatial, modes, per_mode = cfg_or_shapes
-        pol = policy or PrecisionPolicy()
-    o, r = h, len(modes)
-    bb, bo, bh = resolve_blocks(r, batch, h, o)
+    from repro import tuning
+
+    h, spatial, modes, per_mode, pol = _norm_shapes(cfg_or_shapes, policy)
+    r = len(modes)
+    if plans is None:
+        override = (cfg_or_shapes.block_plan
+                    if isinstance(cfg_or_shapes, FNOConfig) else None)
+        plans = tuning.resolve_launch_plans(
+            r, hidden=h, spatial=spatial, modes=modes, per_mode=per_mode,
+            policy=pol, override=override)
+    shapes = (h, spatial, modes, per_mode)
+    one = lambda launch: launch_estimate(shapes, launch,
+                                         plans.for_launch(launch),
+                                         batch=batch, policy=pol)
     full = variant == "full" or r == 1
 
     est: Dict[str, LaunchEstimate] = {}
     if full:
-        est["block_fwd"] = _fused_call_estimate(
-            "block_fwd", spatial, modes, bb, bo, bh, per_mode, pol,
-            with_epilogue=True, with_gy=False)
+        est["block_fwd"] = one("block_fwd")
     else:
-        est["core"] = _core_call_estimate(spatial, modes, bb, bo, bh,
-                                          per_mode, pol)
+        est["core"] = one("core")
     # Backward is always the fully fused adjoint (one linear map serves
     # both variants — ops._fno_block_vjp_bwd).
-    est["gz_recompute"] = _fused_call_estimate(
-        "gz_recompute", spatial, modes, bb, bo, bh, per_mode, pol,
-        with_epilogue=True, with_gy=True)
-    est["dx_adjoint"] = _fused_call_estimate(
-        "dx_adjoint", spatial, modes, bb, bo, bh, per_mode, pol,
-        with_epilogue=True, with_gy=False, adjoint=True)
-    est["wgrad"] = _wgrad_estimate(spatial, modes, bb, bo, bh, per_mode,
-                                   pol, with_bypass=True)
+    est["gz_recompute"] = one("gz_recompute")
+    est["dx_adjoint"] = one("dx_adjoint")
+    est["wgrad"] = one("wgrad")
     return est
 
 
@@ -222,18 +274,21 @@ def check_vmem(configs=None, dtypes: Sequence[str] = ("f32", "bf16"),
                variants: Sequence[str] = ("full", "partial"),
                budget: int = VMEM_BUDGET_BYTES) -> List[Finding]:
     """Estimate every engine launch of the given configs against the VMEM
-    budget. configs: (cfg, must_fit) pairs; defaults to all FNO archs at
-    reduced (must_fit=True — CI lowers these) and full size (must_fit=
-    False → warn: the block-size autotuner work item owns shrinking
-    them)."""
+    budget, at the plans the ops layer would actually resolve (tuned
+    cache → defaults). configs: FNOConfigs or legacy (cfg, must_fit)
+    pairs — every config must fit now (error severity): since the
+    autotuner landed, a full-size config over budget means the committed
+    cache lost coverage, not an accepted limitation. Defaults to all FNO
+    archs at reduced AND full size."""
     from repro.configs import FNO_IDS, get_config
 
     if configs is None:
-        configs = [(get_config(a, reduced=True), True) for a in FNO_IDS]
-        configs += [(get_config(a, reduced=False), False) for a in FNO_IDS]
+        configs = [get_config(a, reduced=True) for a in FNO_IDS]
+        configs += [get_config(a, reduced=False) for a in FNO_IDS]
 
     findings: List[Finding] = []
-    for (cfg, must_fit) in configs:
+    for entry in configs:
+        cfg = entry[0] if isinstance(entry, tuple) else entry
         for dtype in dtypes:
             pol = PrecisionPolicy.from_name(dtype)
             for variant in variants:
@@ -248,8 +303,7 @@ def check_vmem(configs=None, dtypes: Sequence[str] = ("f32", "bf16"),
                         f"estimated {e.total_bytes / 2**20:.1f} MiB VMEM "
                         f"per program ({e.operand_bytes / 2**20:.1f} operand"
                         f" + {e.scratch_bytes / 2**20:.1f} scratch) exceeds "
-                        f"the {budget / 2**20:.0f} MiB budget — shrink "
-                        f"(bb,bo,bh) or split the launch (ROADMAP: "
-                        f"block-size autotuner)",
-                        severity="error" if must_fit else "warn"))
+                        f"the {budget / 2**20:.0f} MiB budget — no tuned "
+                        f"plan covers this shape class; regenerate the "
+                        f"cache (scripts/autotune.py) or shrink (bb,bo,bh)"))
     return findings

@@ -232,6 +232,11 @@ class FNOConfig:
     # GELU in ONE pallas_call per layer (kernels/ops.fno_block_nd). The
     # ref/xla paths ignore it and stay the staged parity oracle.
     fuse_block: bool = False
+    # Explicit (bb, bo, bh) launch-plan override for the pallas kernels.
+    # None (the default) lets ``repro.tuning.resolve_block_plan`` pick the
+    # tuned-cache winner (fallback: ops._BLOCK_DEFAULTS). A component of 0
+    # keeps the resolved value for that axis. See configs.fno.with_block_plan.
+    block_plan: Optional[Tuple[int, int, int]] = None
 
     @property
     def precision(self) -> PrecisionPolicy:
@@ -262,6 +267,11 @@ class FNOConfig:
         for m, s in zip(self.modes, self.spatial):
             assert 0 < m <= s // 2, (
                 f"{self.name}: modes {m} must be <= {s // 2} (Nyquist excl.)")
+        if self.block_plan is not None:
+            assert len(self.block_plan) == 3 and all(
+                isinstance(v, int) and v >= 0 for v in self.block_plan), (
+                f"{self.name}: block_plan must be 3 non-negative ints, got "
+                f"{self.block_plan!r}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,6 +35,14 @@ def with_fuse_block(cfg: FNOConfig, on: bool = True) -> FNOConfig:
     return dataclasses.replace(cfg, fuse_block=on)
 
 
+def with_block_plan(cfg: FNOConfig, bb: int, bo: int, bh: int) -> FNOConfig:
+    """Pin an explicit (bb, bo, bh) launch plan, overriding the tuned
+    cache (``repro.tuning``) component-wise — a component of 0 keeps the
+    resolved value. Composes with :func:`with_precision` /
+    :func:`with_fuse_block`."""
+    return dataclasses.replace(cfg, block_plan=(bb, bo, bh))
+
+
 def fno1d() -> FNOConfig:
     return FNOConfig(
         name="fno1d", ndim=1, hidden=64, num_layers=4,

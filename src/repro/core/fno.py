@@ -99,22 +99,27 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
     # applied in the iDFT epilogue, so the per-layer intermediates never
     # round-trip HBM. The staged composition below stays the oracle.
     fuse = cfg.fuse_block and path == "pallas"
+    # An explicit cfg.block_plan pins the kernel launch plans; otherwise
+    # the ops layer resolves them from the tuned cache (repro.tuning).
+    bkw = {"block_plan": cfg.block_plan} if cfg.block_plan else {}
     for blk in params["blocks"]:
         if fuse:
             h = sc.apply_fno_block_nd(blk["spectral"], blk["bypass"], h,
                                       tuple(cfg.modes), path=path,
-                                      variant=variant, policy=pol)
+                                      variant=variant, policy=pol, **bkw)
             h = shard_activation(h, "fno_hidden")
             continue
         if cfg.ndim == 1:
             s = sc.apply_spectral_1d(blk["spectral"], h, cfg.modes[0],
-                                     path=path, policy=pol)
+                                     path=path, policy=pol, **bkw)
         elif cfg.ndim == 2:
             s = sc.apply_spectral_2d(blk["spectral"], h, tuple(cfg.modes),
-                                     path=path, variant=variant, policy=pol)
+                                     path=path, variant=variant, policy=pol,
+                                     **bkw)
         else:
             s = sc.apply_spectral_3d(blk["spectral"], h, tuple(cfg.modes),
-                                     path=path, variant=variant, policy=pol)
+                                     path=path, variant=variant, policy=pol,
+                                     **bkw)
         h = jax.nn.gelu(s.astype(h.dtype) + _dense(blk["bypass"], h))
         h = shard_activation(h, "fno_hidden")
     out = _dense(params["proj2"], jax.nn.gelu(_dense(params["proj1"], h)))

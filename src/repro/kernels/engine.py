@@ -72,6 +72,18 @@ from repro.kernels import _compiler_params
 _F32 = jnp.float32
 _SEMANTICS = ("parallel", "parallel", "arbitrary")
 
+# Version tag of the engine's launch geometry — the facts a persisted
+# block-size plan depends on: the grid axes and their meaning, which
+# operands are grid-blocked vs constant-index, and the accumulator/scratch
+# layout per launch kind. The tuning cache (repro.tuning) stamps this into
+# its meta and the contract linter refuses a cache tuned against another
+# signature. BUMP THE VERSION whenever a change to the kernels below moves
+# bytes in or out of a program's VMEM window (new operands, scratch shape
+# changes, grid reorderings) — stale winners would otherwise keep passing.
+BLOCK_SIGNATURE = ("fnond-v1:grid=(b/bb,o/bo,h/bh);wgrad-grid=(o/bo,h/bh,"
+                   "b/bb);acc=rev_modes@accum+bypass;launches=block_fwd,"
+                   "gz_recompute,dx_adjoint,wgrad,core")
+
 
 def _dot(a, b, axis, acc=_F32):
     """Contract `axis` of a with dim 0 of b; the new dim is appended last.

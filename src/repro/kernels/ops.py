@@ -31,6 +31,8 @@ from repro.kernels import cgemm as cgemm_k
 from repro.kernels import dft as dft_k
 from repro.kernels import engine
 from repro.kernels import ref as ref_k
+from repro.tuning import resolve_launch_plans
+from repro.tuning.plans import LaunchPlans
 
 
 def on_tpu() -> bool:
@@ -54,9 +56,21 @@ def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
     return jnp.pad(x, cfg)
 
 
+@functools.lru_cache(maxsize=None)
 def _pick_block(dim: int, pref: int) -> int:
-    """Largest divisor-friendly block: pad dim up to a multiple of block."""
-    return min(pref, _rup(dim, 8)) if dim < pref else pref
+    """Clamp a preferred block size to the actual dim with minimal pad
+    waste: among the feasible candidates (8-aligned sizes up to pref, or
+    every size up to pref when pref < 8 — batch blocks), pick the one
+    whose padded total ``_rup(dim, b)`` is smallest, breaking ties toward
+    the larger block (fewer grid steps). This keeps prime/odd extents
+    from forcing near-2× padding — e.g. dim=129 under pref=128 pads to
+    136 via b=8, not to 256 via b=128 — while exact-fit dims still get
+    the largest divisor ≤ pref."""
+    if pref < 8:
+        cands = range(1, pref + 1)
+    else:
+        cands = range(8, max(8, min(pref, _rup(dim, 8))) + 1, 8)
+    return min(cands, key=lambda b: (_rup(dim, b), -b))
 
 
 def _blocks(x, o, bb, bo, bh):
@@ -405,32 +419,33 @@ def _fnond_wgrad(x, gy, modes, bb, bo, bh, interpret, per_mode, pol,
     return (dwr[:o, :h], dwi[:o, :h]) + extra
 
 
-def _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret,
-                       pol):
+def _fnond_pallas_impl(x, wr, wi, modes, variant, plans, interpret, pol):
     # The compute-dtype casts live INSIDE the custom_vjp: primals (and
     # therefore the cotangents the caller sees) stay at the caller's
-    # dtypes, while the kernels run at pol.compute_dtype.
+    # dtypes, while the kernels run at pol.compute_dtype. `plans` is the
+    # per-launch LaunchPlans bundle (hashable nondiff arg): the forward
+    # variants read fwd/core, the backward gz/dx/wgrad.
     cp = jnp.dtype(pol.compute_dtype)
     x, wr, wi = x.astype(cp), wr.astype(cp), wi.astype(cp)
     if variant == "full":
-        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol)
-    return _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret, pol)
+        return _fnond_fused(x, wr, wi, modes, *plans.fwd, interpret, pol)
+    return _fnond_partial(x, wr, wi, modes, *plans.core, interpret, pol)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _spectral_layer_nd_pallas(x, wr, wi, modes, variant, bb, bo, bh,
-                              interpret, pol):
-    return _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh,
-                              interpret, pol)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _spectral_layer_nd_pallas(x, wr, wi, modes, variant, plans, interpret,
+                              pol):
+    return _fnond_pallas_impl(x, wr, wi, modes, variant, plans, interpret,
+                              pol)
 
 
-def _fnond_vjp_fwd(x, wr, wi, modes, variant, bb, bo, bh, interpret, pol):
-    y = _fnond_pallas_impl(x, wr, wi, modes, variant, bb, bo, bh, interpret,
+def _fnond_vjp_fwd(x, wr, wi, modes, variant, plans, interpret, pol):
+    y = _fnond_pallas_impl(x, wr, wi, modes, variant, plans, interpret,
                            pol)
     return y, (x, wr, wi)
 
 
-def _fnond_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, res, gy):
+def _fnond_vjp_bwd(modes, variant, plans, interpret, pol, res, gy):
     # partial and full compute the same linear map, so one adjoint (the
     # fully fused one) serves both variants. Mixed precision: operands run
     # at pol.compute_dtype, the accumulators at pol.accum_dtype (f32), and
@@ -441,9 +456,10 @@ def _fnond_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, res, gy):
     gy = gy.astype(cp)
     wrc, wic = wr.astype(cp), wi.astype(cp)
     dx = _fnond_fused(gy, jnp.swapaxes(wrc, 0, 1), jnp.swapaxes(wic, 0, 1),
-                      modes, bb, bo, bh, interpret, pol, adjoint=True,
+                      modes, *plans.dx, interpret, pol, adjoint=True,
                       out_dtype=jnp.dtype(x.dtype).name)
-    dwr, dwi = _fnond_wgrad(x.astype(cp), gy, modes, bb, bo, bh, interpret,
+    dwr, dwi = _fnond_wgrad(x.astype(cp), gy, modes, *plans.wgrad,
+                            interpret,
                             per_mode=wr.ndim == 2 + len(modes), pol=pol,
                             out_dtype=jnp.dtype(wr.dtype).name)
     return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype))
@@ -484,9 +500,11 @@ def _fnond_xla(x, wr, wi, modes, pol=None):
     return y.astype(x.dtype) if pol is not None else y
 
 
-# Per-rank (bb, bo, bh) kernel block-size defaults — the ONE source of
-# truth for both the spectral layers and the fused block (0 in a public
-# signature means "use this table").
+# Per-rank (bb, bo, bh) kernel block-size defaults — the documented
+# FALLBACK when no tuned cache entry matches a workload's tuning key.
+# Block selection is owned by ``repro.tuning.resolve_launch_plans``
+# (override → tuned cache → this table); nothing outside the resolver
+# and the legacy ``analysis.vmem.resolve_blocks`` helper should read it.
 _BLOCK_DEFAULTS = {1: (8, 128, 128), 2: (2, 128, 32), 3: (1, 128, 16)}
 
 
@@ -495,10 +513,24 @@ def _resolve_blocks(rank, bb, bo, bh):
     return bb or dbb, bo or dbo, bh or dbh
 
 
+def _resolve_plans(x, wr, modes, pol, bb, bo, bh,
+                   block_plan) -> LaunchPlans:
+    """Per-launch block plans for this workload: the tuned-cache resolver
+    keyed on (rank, shape class, layout, per-launch variant, dtype), with
+    explicit nonzero bb/bo/bh (or an ``FNOConfig.block_plan`` triple)
+    overriding component-wise and ``_BLOCK_DEFAULTS`` as the fallback."""
+    override = tuple(block_plan) if block_plan else None
+    plans = resolve_launch_plans(
+        len(modes), hidden=x.shape[1], out=wr.shape[0],
+        spatial=tuple(x.shape[2:]), modes=modes,
+        per_mode=wr.ndim == 2 + len(modes), policy=pol,
+        override=override)
+    return plans.with_override(bb, bo, bh)
+
+
 def _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
-                       interpret, policy=None):
+                       interpret, policy=None, block_plan=None):
     modes = _modes_key(modes)
-    bb, bo, bh = _resolve_blocks(len(modes), bb, bo, bh)
     if path == "ref":
         if policy is not None:  # oracle runs in f32, emits at compute dtype
             y32 = ref_k.ref_fnond(x.astype(jnp.float32),
@@ -509,7 +541,8 @@ def _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
     if path == "xla":
         return _fnond_xla(x, wr, wi, modes, policy)
     pol = policy or _default_policy(x, wr)
-    return _spectral_layer_nd_pallas(x, wr, wi, modes, variant, bb, bo, bh,
+    plans = _resolve_plans(x, wr, modes, pol, bb, bo, bh, block_plan)
+    return _spectral_layer_nd_pallas(x, wr, wi, modes, variant, plans,
                                      _interpret(interpret), pol)
 
 
@@ -517,17 +550,21 @@ def spectral_layer_1d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       modes: int, *, path: str = "pallas",
                       bb: int = 0, bo: int = 0, bh: int = 0,
                       interpret: Optional[bool] = None,
-                      policy: Optional[PrecisionPolicy] = None) -> jax.Array:
+                      policy: Optional[PrecisionPolicy] = None,
+                      block_plan: Optional[Tuple[int, int, int]] = None
+                      ) -> jax.Array:
     """Full 1D FNO spectral layer. x: [B,H,N]; w: [O,H] or [O,H,modes].
 
     path="pallas" is differentiable: jax.grad routes through the fused
     backward kernels (custom_vjp), never falling back to XLA. policy sets
     the mixed-precision contract (bf16 kernel I/O with f32 accumulators);
-    None infers a uniform policy from the operand dtypes. bb/bo/bh=0
-    selects the per-rank defaults (``_BLOCK_DEFAULTS``).
+    None infers a uniform policy from the operand dtypes. Block sizes
+    resolve through ``repro.tuning.resolve_launch_plans`` (tuned cache →
+    ``_BLOCK_DEFAULTS``); nonzero bb/bo/bh or a ``block_plan`` triple
+    override component-wise.
     """
     return _spectral_layer_nd(x, wr, wi, (modes,), path, "full", bb, bo, bh,
-                              interpret, policy)
+                              interpret, policy, block_plan)
 
 
 def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
@@ -535,17 +572,19 @@ def spectral_layer_2d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       variant: str = "full", bb: int = 0, bo: int = 0,
                       bh: int = 0,
                       interpret: Optional[bool] = None,
-                      policy: Optional[PrecisionPolicy] = None) -> jax.Array:
+                      policy: Optional[PrecisionPolicy] = None,
+                      block_plan: Optional[Tuple[int, int, int]] = None
+                      ) -> jax.Array:
     """Full 2D FNO spectral layer, TurboFNO truncation convention.
 
     x: [B,H,X,Y]; w: [O,H] or [O,H,kx,ky]. variant: "partial" fuses only
     around the CGEMM (paper-faithful); "full" fuses the entire layer
     (beyond-paper, docs/DESIGN.md §3.4). path="pallas" is differentiable via
-    custom_vjp (fused backward for both variants). policy: see
-    spectral_layer_1d.
+    custom_vjp (fused backward for both variants). policy / block
+    selection: see spectral_layer_1d.
     """
     return _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
-                              interpret, policy)
+                              interpret, policy, block_plan)
 
 
 def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
@@ -553,7 +592,9 @@ def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
                       variant: str = "full", bb: int = 0, bo: int = 0,
                       bh: int = 0,
                       interpret: Optional[bool] = None,
-                      policy: Optional[PrecisionPolicy] = None) -> jax.Array:
+                      policy: Optional[PrecisionPolicy] = None,
+                      block_plan: Optional[Tuple[int, int, int]] = None
+                      ) -> jax.Array:
     """Full 3D FNO spectral layer (Navier–Stokes-class workloads).
 
     x: [B,H,X,Y,Z]; w: [O,H] or [O,H,kx,ky,kz]. Same engine, rank pinned
@@ -561,10 +602,10 @@ def spectral_layer_3d(x: jax.Array, wr: jax.Array, wi: jax.Array,
     (paper-faithful) fuses only the GEMM-adjacent cDFT/icDFT pair and runs
     the outer transforms as ONE batched standalone launch per direction.
     path="pallas" is differentiable via custom_vjp (fused backward for
-    both variants). policy: see spectral_layer_1d.
+    both variants). policy / block selection: see spectral_layer_1d.
     """
     return _spectral_layer_nd(x, wr, wi, modes, path, variant, bb, bo, bh,
-                              interpret, policy)
+                              interpret, policy, block_plan)
 
 
 # ---------------------------------------------------------------------------
@@ -611,7 +652,7 @@ def _fno_block_oracle(x, wr, wi, wb, bias, modes, path, pol, act="gelu"):
     return _block_tail(s, x.astype(cp), wb, bias, s.dtype, act)
 
 
-def _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+def _fno_block_impl(x, wr, wi, wb, bias, modes, variant, plans,
                     interpret, pol, act, out_dtype):
     # Same cast contract as the spectral layer: compute-dtype casts live
     # inside the custom_vjp so the caller's primal/cotangent dtypes are
@@ -623,31 +664,31 @@ def _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
     od = jnp.dtype(out_dtype) if out_dtype else cp
     x, wr, wi, wb, bias = (a.astype(cp) for a in (x, wr, wi, wb, bias))
     if variant == "full":
-        return _fnond_fused(x, wr, wi, modes, bb, bo, bh, interpret, pol,
+        return _fnond_fused(x, wr, wi, modes, *plans.fwd, interpret, pol,
                             wb=wb, bias=bias, act=act, out_dtype=od.name)
     # Paper-faithful partial fusion keeps the multi-kernel spectral
     # pipeline; the block tail (bypass+bias+act) runs as XLA ops. The
     # BACKWARD still uses the fully fused adjoint (one linear map).
-    s = _fnond_partial(x, wr, wi, modes, bb, bo, bh, interpret, pol)
+    s = _fnond_partial(x, wr, wi, modes, *plans.core, interpret, pol)
     return _block_tail(s, x, wb, bias, od, act)
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(5, 6, 7, 8, 9, 10, 11, 12, 13))
-def _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+                   nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
+def _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, plans,
                          interpret, pol, act, out_dtype):
-    return _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+    return _fno_block_impl(x, wr, wi, wb, bias, modes, variant, plans,
                            interpret, pol, act, out_dtype)
 
 
-def _fno_block_vjp_fwd(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+def _fno_block_vjp_fwd(x, wr, wi, wb, bias, modes, variant, plans,
                        interpret, pol, act, out_dtype):
-    y = _fno_block_impl(x, wr, wi, wb, bias, modes, variant, bb, bo, bh,
+    y = _fno_block_impl(x, wr, wi, wb, bias, modes, variant, plans,
                         interpret, pol, act, out_dtype)
     return y, (x, wr, wi, wb, bias)
 
 
-def _fno_block_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, act,
+def _fno_block_vjp_bwd(modes, variant, plans, interpret, pol, act,
                        out_dtype, res, gy):
     x, wr, wi, wb, bias = res
     cp = jnp.dtype(pol.compute_dtype)
@@ -656,7 +697,7 @@ def _fno_block_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, act,
     if act == "gelu":
         # (1) recompute the pre-activation through the fused forward and
         # form gz = gy·gelu'(z) in the epilogue — z never reaches HBM.
-        gz = _fnond_fused(xc, wrc, wic, modes, bb, bo, bh, interpret, pol,
+        gz = _fnond_fused(xc, wrc, wic, modes, *plans.gz, interpret, pol,
                           wb=wbc, bias=biasc, gy=gyc, act="gelu_vjp")
     else:
         # Linear block (the TP-sharded partial): z IS the output, so the
@@ -666,13 +707,13 @@ def _fno_block_vjp_bwd(modes, variant, bb, bo, bh, interpret, pol, act,
     # adjoint operands, swapped spectral weight, transposed bypass, linear
     # epilogue; dx emitted at the primal dtype from the f32 accumulator.
     dx = _fnond_fused(gz, jnp.swapaxes(wrc, 0, 1), jnp.swapaxes(wic, 0, 1),
-                      modes, bb, bo, bh, interpret, pol, adjoint=True,
+                      modes, *plans.dx, interpret, pol, adjoint=True,
                       out_dtype=jnp.dtype(x.dtype).name,
                       wb=jnp.swapaxes(wbc, 0, 1))
     # (3) dW, dW_b, dbias from ONE extended wgrad kernel, emitted at the
     # param dtype straight from the f32 accumulators.
     dwr, dwi, dwb, db = _fnond_wgrad(
-        xc, gz, modes, bb, bo, bh, interpret,
+        xc, gz, modes, *plans.wgrad, interpret,
         per_mode=wr.ndim == 2 + len(modes), pol=pol,
         out_dtype=jnp.dtype(wr.dtype).name, with_bypass=True)
     return (dx.astype(x.dtype), dwr.astype(wr.dtype), dwi.astype(wi.dtype),
@@ -689,7 +730,9 @@ def fno_block_nd(x: jax.Array, wr: jax.Array, wi: jax.Array, wb: jax.Array,
                  interpret: Optional[bool] = None,
                  policy: Optional[PrecisionPolicy] = None,
                  act: str = "gelu",
-                 out_dtype: Optional[str] = None) -> jax.Array:
+                 out_dtype: Optional[str] = None,
+                 block_plan: Optional[Tuple[int, int, int]] = None
+                 ) -> jax.Array:
     """One whole FNO block: y = act(spectral(x) + x·W_bᵀ + bias).
 
     x: [B,H,s_1..s_R]; wr/wi: [O,H] or [O,H,k_1..k_R] spectral weight;
@@ -700,8 +743,10 @@ def fno_block_nd(x: jax.Array, wr: jax.Array, wi: jax.Array, wb: jax.Array,
     cotangents (dx, dW, dW_b, dbias) via custom_vjp. variant="partial"
     keeps the paper-faithful multi-kernel spectral pipeline (XLA block
     tail) but shares the same fused backward. path="ref"/"xla" are the
-    staged parity oracles. Block sizes default per rank
-    (``_BLOCK_DEFAULTS``); policy: see spectral_layer_1d.
+    staged parity oracles. Block sizes come from the tuned-plan resolver
+    (override → ``tuning/cache`` → ``_BLOCK_DEFAULTS``); nonzero bb/bo/bh
+    or ``block_plan`` override component-wise across all five launches.
+    policy: see spectral_layer_1d.
 
     act: "gelu" (the standard block) or "linear" (pre-activation only —
     the TP-sharded dispatch reduces partial pre-activations with a psum
@@ -712,15 +757,14 @@ def fno_block_nd(x: jax.Array, wr: jax.Array, wi: jax.Array, wb: jax.Array,
     stays f32 under the bf16 policy (ROADMAP.md §Precision policy).
     """
     modes = _modes_key(modes)
-    bb, bo, bh = _resolve_blocks(len(modes), bb, bo, bh)
     assert act in ("gelu", "linear"), act
     if path in ("ref", "xla"):
         return _fno_block_oracle(x, wr, wi, wb, bias, modes, path, policy,
                                  act)
     pol = policy or _default_policy(x, wr)
-    return _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, bb, bo,
-                                bh, _interpret(interpret), pol, act,
-                                out_dtype)
+    plans = _resolve_plans(x, wr, modes, pol, bb, bo, bh, block_plan)
+    return _fno_block_nd_pallas(x, wr, wi, wb, bias, modes, variant, plans,
+                                _interpret(interpret), pol, act, out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -744,7 +788,9 @@ def fno_block_nd_sharded(x: jax.Array, wr: jax.Array, wi: jax.Array,
                          variant: str = "full", bb: int = 0, bo: int = 0,
                          bh: int = 0, interpret: Optional[bool] = None,
                          policy: Optional[PrecisionPolicy] = None,
-                         act: str = "gelu") -> jax.Array:
+                         act: str = "gelu",
+                         block_plan: Optional[Tuple[int, int, int]] = None
+                         ) -> jax.Array:
     """``fno_block_nd`` under shard_map on a (DP×TP) mesh — the production
     dispatch behind ``core.spectral_conv.apply_fno_block_nd`` whenever a
     ``sharding_context`` is active. Fully differentiable: shard_map
@@ -770,7 +816,7 @@ def fno_block_nd_sharded(x: jax.Array, wr: jax.Array, wi: jax.Array,
     wbspec = guard_spec(P(None, h_ent), wb.shape, mesh)
     out_spec = P(xspec[0], None, *sp0)
     kw = dict(variant=variant, bb=bb, bo=bo, bh=bh, interpret=interpret,
-              policy=pol)
+              policy=pol, block_plan=block_plan)
 
     def local(xl, wrl, wil, wbl, bl):
         if not tp_on:

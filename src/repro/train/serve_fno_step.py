@@ -6,8 +6,9 @@ batch, no KV cache, no autoregression — so serving reduces to (1) batching
 requests, (2) padding each batch to a BUCKET size so the jit cache stays
 finite and the fused kernel's grid never re-specializes, and (3) running
 the bucketed forward on a DP×TP mesh. Buckets are multiples of the fused
-engine's batch block (``kernels.ops._BLOCK_DEFAULTS``) times the DP shard
-count, so neither the kernel nor the mesh ever sees a ragged batch.
+engine's tuned batch block (``repro.tuning.resolve_block_plan`` — the
+autotuned cache with ``ops._BLOCK_DEFAULTS`` as fallback) times the DP
+shard count, so neither the kernel nor the mesh ever sees a ragged batch.
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import FNOConfig
 from repro.core import fno as fno_mod
 from repro.distributed import sharding as shd
-from repro.kernels.ops import _BLOCK_DEFAULTS
+from repro.tuning import resolve_block_plan
 
 
 def make_fno_serve_step(cfg: FNOConfig, *, path: Optional[str] = None,
@@ -37,9 +38,11 @@ def make_fno_serve_step(cfg: FNOConfig, *, path: Optional[str] = None,
 
 
 def batch_block(cfg: FNOConfig) -> int:
-    """The fused engine's batch block (bb) for this rank — the serving
-    quantum, so the kernel grid never pads the batch internally."""
-    return _BLOCK_DEFAULTS[cfg.ndim][0]
+    """The fused engine's batch block (bb) for this workload — the
+    serving quantum, so the kernel grid never pads the batch internally.
+    Resolved through the tuned-plan cache (override → cache → static
+    defaults), same as the kernel launch itself will."""
+    return resolve_block_plan(cfg, "block_fwd").bb
 
 
 def bucket_sizes(max_batch: int, *, quantum: int = 1) -> Tuple[int, ...]:

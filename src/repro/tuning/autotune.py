@@ -1,0 +1,301 @@
+"""The block-size autotuner: generate → VMEM-prune → measure → persist.
+
+TVM/Ansor-shaped search specialized to the fused FNO engine's tiny
+3-parameter launch space (docs/DESIGN.md §8). For every tuning key the
+config matrix can emit (all ``FNO_IDS`` × {full, reduced} × {f32, bf16}
+× launch kinds):
+
+1. **generate** the candidate grid — bb ∈ {1, 2, 4, 8}, bo/bh ∈ {8, 16,
+   32, 64, 128}, plus the rank's static default — clamped to the probe
+   dims (``ops._pick_block``) and deduped on the effective triple;
+2. **prune** statically with ``analysis.vmem.launch_estimate`` against
+   ``VMEM_BUDGET_BYTES`` — the estimator is deliberately a floor, so
+   anything it rejects is certainly infeasible on hardware;
+3. **measure** the top-K surviving candidates (static score: least pad
+   waste, then largest bo/bh/bb) with the bench harness
+   (``benchmarks.common.time_fn``) over jit-wrapped interpret-mode
+   launches — only for probes small enough to interpret
+   (``hidden·∏spatial ≤ MEASURE_ELEMS``; the full-size 2D/3D grids keep
+   their statically-scored winner, flagged ``source: "estimated"``);
+4. **persist** winners + evidence (VMEM estimate, wall time, probe
+   shapes) via ``store.save_cache`` — the committed
+   ``tuning/cache/blocks.json`` that ``resolve_launch_plans`` reads.
+
+Entry points: :func:`tune` (library), ``scripts/autotune.py`` (CLI),
+``benchmarks/run.py --autotune`` (bench hook).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.tuning import plans as P
+from repro.tuning import store
+
+# A candidate interpret-mode measurement is only meaningful (and
+# affordable) when the probe activation is small: hidden·∏spatial in
+# elements. Reduced configs and the full-size 1D config qualify; the
+# full-size 2D/3D grids are statically scored.
+MEASURE_ELEMS = 131_072
+
+_BB_GRID = (1, 2, 4, 8)
+# bo/bh down to 1: the big full-size spatial grids (fno3d keeps 2·bh·∏s
+# f32 elements of x windows resident) are only VMEM-feasible with bh < 8,
+# trading MXU tile width for fitting the budget at all.
+_BOH_GRID = (1, 2, 4, 8, 16, 32, 64, 128)
+_TOP_K = 3
+_PROBE_BATCH = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One tunable workload = one (shape class, layout, dtype) cell."""
+
+    label: str  # e.g. "fno2d/reduced"
+    rank: int
+    hidden: int
+    spatial: Tuple[int, ...]
+    modes: Tuple[int, ...]
+    per_mode: bool
+    dtype: str  # "f32" | "bf16"
+
+    @property
+    def klass(self) -> str:
+        return P.shape_class(self.hidden, self.hidden, self.spatial,
+                             self.modes)
+
+    @property
+    def layout(self) -> str:
+        return "per_mode" if self.per_mode else "shared"
+
+    @property
+    def elems(self) -> int:
+        n = self.hidden
+        for s in self.spatial:
+            n *= s
+        return n
+
+    @property
+    def launches(self) -> Tuple[str, ...]:
+        # Rank 1 has no distinct core launch: partial fusion degenerates
+        # to full there and the resolver aliases core → block_fwd.
+        if self.rank == 1:
+            return tuple(k for k in P.LAUNCH_KINDS if k != "core")
+        return P.LAUNCH_KINDS
+
+    def policy(self):
+        from repro.configs.base import PrecisionPolicy
+        return PrecisionPolicy.from_name(self.dtype)
+
+
+def tunable_workloads(smoke: bool = False) -> List[Workload]:
+    """Every (shape class, layout, dtype) the config matrix can emit,
+    deduped (e.g. reduced fno2d and reduced fno2d-large share a cell).
+    ``smoke`` keeps only the reduced shapes — a seconds-long CI pass."""
+    from repro.configs import FNO_IDS, get_config
+
+    out: List[Workload] = []
+    seen = set()
+    for arch in FNO_IDS:
+        variants = [(get_config(arch, reduced=True), "reduced")]
+        if not smoke:
+            variants.append((get_config(arch), "full"))
+        for cfg, tag in variants:
+            for dtype in ("f32", "bf16"):
+                w = Workload(
+                    label=f"{arch}/{tag}", rank=cfg.ndim, hidden=cfg.hidden,
+                    spatial=tuple(cfg.spatial), modes=tuple(cfg.modes),
+                    per_mode=cfg.weight_mode == "per_mode", dtype=dtype)
+                cell = (w.rank, w.klass, w.layout, w.dtype)
+                if cell not in seen:
+                    seen.add(cell)
+                    out.append(w)
+    return out
+
+
+def _candidates(w: Workload) -> List[Tuple[int, int, int]]:
+    """Candidate grid, clamped to the probe dims and deduped on the
+    effective triple (two preferences that clamp to the same launch are
+    the same candidate)."""
+    from repro.kernels.ops import _BLOCK_DEFAULTS, _pick_block
+
+    raw = list(itertools.product(_BB_GRID, _BOH_GRID, _BOH_GRID))
+    raw.append(_BLOCK_DEFAULTS[w.rank])
+    seen, out = set(), []
+    for bb, bo, bh in raw:
+        eff = (_pick_block(_PROBE_BATCH, bb), _pick_block(w.hidden, bo),
+               _pick_block(w.hidden, bh))
+        if eff not in seen:
+            seen.add(eff)
+            out.append(eff)
+    return out
+
+
+def _pad_waste(w: Workload, t: Tuple[int, int, int]) -> float:
+    """Fractional compute overhead from padding each gridded dim up to a
+    block multiple (bb against the probe batch; bo/bh against hidden)."""
+    def frac(dim, b):
+        return (-dim % b) / dim
+
+    return (frac(_PROBE_BATCH, t[0]) + frac(w.hidden, t[1])
+            + frac(w.hidden, t[2]))
+
+
+def _static_rank(w: Workload, feasible):
+    """Least pad waste first, then the largest bo (widest MXU output
+    tile), bh (longest k-loop windows), bb (fewest batch launches)."""
+    return sorted(feasible, key=lambda e: (
+        _pad_waste(w, e[0]), -e[0][1], -e[0][2], -e[0][0]))
+
+
+def _feasible(w: Workload) -> Dict[str, List[Tuple[Tuple[int, int, int],
+                                                   int]]]:
+    """Per launch kind: (triple, est_bytes) for every candidate that
+    fits the budget."""
+    from repro.analysis.vmem import VMEM_BUDGET_BYTES, launch_estimate
+
+    shapes = (w.hidden, w.spatial, w.modes, w.per_mode)
+    pol = w.policy()
+    out: Dict[str, List] = {}
+    for launch in w.launches:
+        fits = []
+        for t in _candidates(w):
+            est = launch_estimate(shapes, launch, t, batch=_PROBE_BATCH,
+                                  policy=pol)
+            if est.total_bytes <= VMEM_BUDGET_BYTES:
+                fits.append((t, est.total_bytes))
+        out[launch] = fits
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Measurement: jit-wrapped interpret-mode launches over a shared probe.
+# ---------------------------------------------------------------------------
+def _probe_arrays(w: Workload):
+    import jax
+    import jax.numpy as jnp
+
+    pol = w.policy()
+    cp = jnp.dtype(pol.compute_dtype)
+    h, r = w.hidden, w.rank
+    ks = [jax.random.PRNGKey(i) for i in range(6)]
+    x = jax.random.normal(ks[0], (_PROBE_BATCH, h) + w.spatial, cp)
+    wshape = (h, h) + (w.modes if w.per_mode else ())
+    wr = jax.random.normal(ks[1], wshape, cp) * 0.1
+    wi = jax.random.normal(ks[2], wshape, cp) * 0.1
+    wb = jax.random.normal(ks[3], (h, h), cp) * 0.1
+    bias = jax.random.normal(ks[4], (h,), cp) * 0.1
+    gy = jax.random.normal(ks[5], x.shape, cp)
+    return x, wr, wi, wb, bias, gy
+
+
+def _launch_fn(w: Workload, launch: str, triple: Tuple[int, int, int]):
+    """A jitted zero-arg closure running ONE launch of the given kind at
+    the probe shapes — the same internal entry points the custom_vjps
+    call, so measured time ranks real launches."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    x, wr, wi, wb, bias, gy = _probe_arrays(w)
+    bb, bo, bh = triple
+    pol = w.policy()
+    modes = w.modes
+
+    if launch == "block_fwd":
+        def fn():
+            return ops._fnond_fused(x, wr, wi, modes, bb, bo, bh, True, pol,
+                                    wb=wb, bias=bias, act="gelu")
+    elif launch == "core":
+        def fn():
+            return ops._fnond_partial(x, wr, wi, modes, bb, bo, bh, True,
+                                      pol)
+    elif launch == "gz_recompute":
+        def fn():
+            return ops._fnond_fused(x, wr, wi, modes, bb, bo, bh, True, pol,
+                                    wb=wb, bias=bias, gy=gy, act="gelu_vjp")
+    elif launch == "dx_adjoint":
+        def fn():
+            return ops._fnond_fused(
+                gy, jnp.swapaxes(wr, 0, 1), jnp.swapaxes(wi, 0, 1), modes,
+                bb, bo, bh, True, pol, adjoint=True,
+                wb=jnp.swapaxes(wb, 0, 1))
+    else:  # wgrad
+        def fn():
+            return ops._fnond_wgrad(x, gy, modes, bb, bo, bh, True,
+                                    per_mode=w.per_mode, pol=pol,
+                                    with_bypass=True)
+    return jax.jit(fn)
+
+
+def _measure(w: Workload, launch: str, triple, iters: int) -> float:
+    import sys
+
+    bench = _bench_dir()
+    if bench not in sys.path:  # the harness is a top-level dir, not a pkg
+        sys.path.insert(0, bench)
+    from common import time_fn
+
+    fn = _launch_fn(w, launch, triple)
+    return time_fn(fn, warmup=1, iters=iters)
+
+
+def _bench_dir() -> str:
+    import os
+
+    return os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))), "benchmarks")
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def tune(measure: str = "auto", smoke: bool = False,
+         out: Optional[str] = None, iters: int = 5,
+         log=print) -> Tuple[str, Dict[str, dict]]:
+    """Run the full search and persist the cache. ``measure``: "auto"
+    (probes under :data:`MEASURE_ELEMS` get wall-timed), "all" (force
+    timing everywhere — slow off-TPU), "none" (static scores only —
+    the CI smoke mode). Returns (cache_path, entries)."""
+    assert measure in ("auto", "all", "none"), measure
+    entries: Dict[str, dict] = {}
+    for w in tunable_workloads(smoke=smoke):
+        feasible = _feasible(w)
+        timed = measure == "all" or (measure == "auto"
+                                     and w.elems <= MEASURE_ELEMS)
+        for launch in w.launches:
+            key = P.plan_key(w.rank, w.klass, w.layout, w.dtype, launch)
+            if key in entries:
+                continue
+            fits = _static_rank(w, feasible[launch])
+            if not fits:
+                log(f"  !! {key}: NO feasible candidate — key left to the "
+                    f"static fallback")
+                continue
+            entry = {"probe": {"batch": _PROBE_BATCH, "hidden": w.hidden,
+                               "spatial": list(w.spatial),
+                               "modes": list(w.modes)},
+                     "workload": w.label}
+            if timed:
+                best_us, best = None, None
+                for t, est in fits[:_TOP_K]:
+                    us = _measure(w, launch, t, iters)
+                    log(f"  {key}: {t} -> {us:.0f}us "
+                        f"({est / 2**20:.1f} MiB est)")
+                    if best_us is None or us < best_us:
+                        best_us, best = us, (t, est)
+                entry.update(bb=best[0][0], bo=best[0][1], bh=best[0][2],
+                             est_bytes=best[1], us=round(best_us, 1),
+                             source="measured")
+            else:
+                t, est = fits[0]
+                log(f"  {key}: {t} ({est / 2**20:.1f} MiB est, static)")
+                entry.update(bb=t[0], bo=t[1], bh=t[2], est_bytes=est,
+                             source="estimated")
+            entries[key] = entry
+    path = store.save_cache(entries, meta={"measure": measure,
+                                           "smoke": smoke}, path=out)
+    log(f"wrote {len(entries)} entries -> {path}")
+    return path, entries

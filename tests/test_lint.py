@@ -52,10 +52,28 @@ def test_vmem_reduced_configs_fit():
     assert errors(vmem.check_vmem(configs=cfgs)) == []
 
 
-def test_vmem_full_size_configs_warn_not_error():
-    fs = vmem.check_vmem(configs=[(get_config("fno3d"), False)])
-    assert fs and errors(fs) == []
-    assert all(f.severity == "warn" for f in fs)
+def test_vmem_full_size_configs_clean_with_tuned_cache():
+    # Since the tuned cache (ISSUE 7), EVERY config — the big full-size
+    # grids included — must resolve a budget-feasible plan at ERROR
+    # severity. fno3d is the stress case: its x windows alone forced the
+    # static defaults ~9x over budget before tuning.
+    fs = vmem.check_vmem(configs=[get_config("fno3d")])
+    assert fs == [], fs
+
+
+def test_vmem_errors_without_tuned_cache(monkeypatch):
+    # Mutation: with the cache gone, resolution falls back to the static
+    # defaults, which overflow VMEM on the full-size 3D grid — the
+    # checker must fire at error severity (the pre-tuning 42-warning
+    # state is no longer tolerated).
+    from repro.tuning import store
+
+    monkeypatch.setattr(store, "load_cache",
+                        lambda path=None: {"meta": {}, "entries": {}})
+    fs = vmem.check_vmem(configs=[get_config("fno3d")], dtypes=("f32",),
+                         variants=("full",))
+    assert fs and errors(fs)
+    assert any("regenerate the cache" in f.message for f in fs)
 
 
 def test_sharded_and_serve_lints_clean(subproc):
