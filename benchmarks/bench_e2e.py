@@ -235,13 +235,18 @@ def run_tuned(quick: bool = False):
 
 
 def run_serve(quick: bool = False):
-    """FNO serving throughput row pair (ISSUE 5): the batched serve step
-    with the whole-block fusion on vs off, placed DP×TP over the local
-    devices (DP shards the request batch, TP the hidden k-loop axis when
-    it divides — docs/DESIGN.md §6). derived = samples/s + the mesh grid;
-    off-TPU the pallas kernels run in interpret mode, so the ratio
-    validates the serving harness rather than claiming TPU speedup (see
-    run_block's byte model for the fusion claim)."""
+    """FNO serving throughput rows (ISSUE 5 + ISSUE 8): the batched serve
+    step with the whole-block fusion on vs off, placed DP×TP over the
+    local devices (DP shards the request batch, TP the hidden k-loop axis
+    when it divides — docs/DESIGN.md §6), then the TP collective-layout
+    pair — the scattered layout (interior psum_scatter emitting the next
+    layer's hidden shard) vs the all-reduce-every-layer psum layout.
+    derived = samples/s, the mesh grid, and `coll_bytes` — the modeled
+    per-device ICI wire bytes of the TP collectives per forward
+    (`roofline.analysis.fno_collective_bytes`); off-TPU the pallas kernels
+    run in interpret mode and the collectives cross no real ICI, so the
+    byte model carries the traffic claim (exactly 0.5x per interior layer)
+    while the wall ratio only validates the harness."""
     import dataclasses
 
     from repro.configs import get_config
@@ -249,6 +254,7 @@ def run_serve(quick: bool = False):
     from repro.distributed import sharding as shd
     from repro.launch.mesh import make_compat_mesh
     from repro.launch.serve_fno import _pick_tp
+    from repro.roofline.analysis import fno_collective_bytes
     from repro.train import serve_fno_step as sfs
 
     print("# bench_e2e serving rows: name,us_per_call,derived")
@@ -261,18 +267,45 @@ def run_serve(quick: bool = False):
     x = jnp.asarray(np.random.default_rng(2).normal(
         size=(b, cfg0.in_channels) + tuple(cfg0.spatial)), jnp.float32)
 
-    times = {}
-    for name, fuse in (("unfused", False), ("fused", True)):
-        cfg = dataclasses.replace(cfg0, path="pallas", fuse_block=fuse)
+    def serve_time(cfg):
         ctx = shd.make_context(cfg, mesh, kind="serve")
         params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
         # one full-bucket request per call — the server's own jit cache
         server = sfs.FNOServer(cfg, params, ctx=ctx, max_batch=b)
-        times[name] = time_fn(server, x, iters=5)
+        return time_fn(server, x, iters=5)
+
+    times = {}
+    for name, fuse in (("unfused", False), ("fused", True)):
+        cfg = dataclasses.replace(cfg0, path="pallas", fuse_block=fuse)
+        times[name] = serve_time(cfg)
+        cb = fno_collective_bytes(cfg, dp, tp, batch=b)
         row(f"serve2d_{name}_dp{dp}tp{tp}", times[name],
-            f"samples_per_s={b / (times[name] * 1e-6):.1f}")
+            f"samples_per_s={b / (times[name] * 1e-6):.1f} "
+            f"coll_bytes={cb['total'] / 2**10:.1f}KiB")
     row("serve2d_fusion_gain", times["fused"],
         f"speedup={times['unfused'] / times['fused']:.2f}x grid=dp{dp}xtp{tp}")
+
+    # TP collective-layout pair (ISSUE 8): fused serve step under the
+    # scattered layout vs the legacy psum layout, same mesh. The modeled
+    # interior-layer wire bytes halve under scatter; the final layer
+    # always psums (the projection consumes the full hidden vector).
+    lt, lb = {}, {}
+    for layout in ("scatter", "psum"):
+        cfg = dataclasses.replace(cfg0, path="pallas", fuse_block=True,
+                                  tp_layout=layout)
+        lt[layout] = serve_time(cfg)
+        lb[layout] = fno_collective_bytes(cfg, dp, tp,
+                                          scattered=layout == "scatter",
+                                          batch=b)
+        row(f"serve2d_fused_{layout}_dp{dp}tp{tp}", lt[layout],
+            f"samples_per_s={b / (lt[layout] * 1e-6):.1f} "
+            f"coll_bytes={lb[layout]['total'] / 2**10:.1f}KiB "
+            f"interior_per_layer={lb[layout]['interior_per_layer'] / 2**10:.1f}KiB")
+    ratio = (lb["scatter"]["interior_per_layer"]
+             / lb["psum"]["interior_per_layer"]) if tp > 1 else 0.0
+    row("serve2d_layout_gain", lt["scatter"],
+        f"speedup={lt['psum'] / lt['scatter']:.2f}x "
+        f"interior_bytes_ratio={ratio:.3f}x grid=dp{dp}xtp{tp}")
 
 
 if __name__ == "__main__":

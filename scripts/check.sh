@@ -14,6 +14,11 @@ python scripts/fused_block_smoke.py
 # sharded dispatch and that every served output is finite.
 python -m repro.launch.serve --arch fno2d --reduced --requests 2 \
   --max-batch 2
+# TP overlap smoke (ISSUE 8): the scattered layout's ppermute-ring
+# overlap mode vs the one-shot psum_scatter on a forced dp2xtp4 mesh —
+# forward/grad parity plus the exact traced collective plan ((tp-1)
+# ppermutes per interior layer, one final psum).
+python scripts/overlap_smoke.py
 # Autotuner smoke (ISSUE 7): the generate -> VMEM-prune -> persist
 # pipeline over the reduced shapes into a throwaway cache, then the
 # staleness lint over it. Pure python byte-model math — seconds, no jax.

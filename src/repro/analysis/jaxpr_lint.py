@@ -14,9 +14,14 @@ the contracts are stated at):
     between the dtypes the active ``PrecisionPolicy`` names (so the f32
     preset admits NO float↔float casts, the bf16 preset only f32↔bf16);
     anything else is a stray cast that would silently change numerics.
-  * **collective-budget** — DESIGN.md §6: exactly one ``psum`` per layer
-    on the TP pre-activation, zero under pure DP, and never an explicit
-    all_gather / all_to_all / ppermute on the FNO forward or serve path.
+  * **collective-budget** — DESIGN.md §6: on the scattered TP layout one
+    ``psum_scatter`` per interior layer emits the next layer's hidden
+    shard and only the FINAL layer completes with a ``psum``; the legacy
+    psum layout budgets one ``psum`` per layer; pure DP budgets zero of
+    either; and never an explicit all_gather / all_to_all / ppermute on
+    the FNO forward or serve path (the opt-in ring-overlap variant, which
+    trades the one psum_scatter for tp-1 ppermutes, is smoke-checked by
+    ``scripts/overlap_smoke.py`` rather than budgeted here).
 
 ``lint_*`` drivers sweep the production matrix (ranks 1-3 × weight
 layouts × fusion variants × f32/bf16 × DP/TP); ``scripts/lint.py`` is the
@@ -134,21 +139,42 @@ def check_cast_ownership(fn, args: Sequence, policy: PrecisionPolicy, *,
 
 
 def check_collective_budget(fn, args: Sequence, *, psums: int, target: str,
+                            psum_scatters: int = 0,
                             kwargs: Optional[dict] = None) -> List[Finding]:
+    """Budget the explicit collectives a traced path may contain.
+
+    psums: full all-reduces (one per TP layer on the psum layout; exactly
+    one — the final layer's — on the scattered layout). psum_scatters:
+    reduce-scatters emitting the next layer's hidden shard (one per
+    INTERIOR TP layer on the scattered layout, zero otherwise).
+    ``lax.psum_scatter`` traces as the ``reduce_scatter`` primitive on
+    JAX 0.4.x — both spellings count toward the same budget. Anything
+    else (all_gather, all_to_all, ppermute) is unexpected on the FNO
+    forward/serve path.
+    """
     counts = collective_counts(fn, *args, **(kwargs or {}))
     findings = []
     got = counts.pop("psum", 0)
     if got != psums:
         findings.append(Finding(
             "collective-budget", target,
-            f"traced {got} psum(s), want exactly {psums} (one per TP layer "
-            f"on the pre-activation, zero under pure DP — DESIGN.md §6)"))
+            f"traced {got} psum(s), want exactly {psums} (scattered "
+            f"layout: only the final TP layer psums; psum layout: one per "
+            f"TP layer; zero under pure DP — DESIGN.md §6)"))
+    got_rs = counts.pop("psum_scatter", 0) + counts.pop("reduce_scatter", 0)
+    if got_rs != psum_scatters:
+        findings.append(Finding(
+            "collective-budget", target,
+            f"traced {got_rs} psum_scatter(s), want exactly "
+            f"{psum_scatters} (one per INTERIOR TP layer on the scattered "
+            f"layout, emitting the next layer's hidden shard — "
+            f"DESIGN.md §6)"))
     if counts:
         shown = ", ".join(f"{k}×{v}" for k, v in sorted(counts.items()))
         findings.append(Finding(
             "collective-budget", target,
-            f"unexpected collective(s) on a path budgeted for psum only: "
-            f"{shown}"))
+            f"unexpected collective(s) on a path budgeted for psum/"
+            f"psum_scatter only: {shown}"))
     return findings
 
 
@@ -263,14 +289,21 @@ def _mesh_or_finding(dp: int, tp: int, target: str):
 
 def lint_sharded_blocks(mesh_grids: Sequence[Tuple[int, int]] = ((8, 1),
                                                                  (4, 2)),
-                        dtypes: Sequence[str] = DTYPES) -> List[Finding]:
-    """``fno_block_nd_sharded`` under DP and DP×TP: still one pallas_call
-    per shard, exactly one psum iff TP is on, policy-clean casts."""
+                        dtypes: Sequence[str] = DTYPES,
+                        layouts: Sequence[str] = ("psum", "scatter")
+                        ) -> List[Finding]:
+    """``fno_block_nd_sharded`` under DP and DP×TP, both TP layouts: still
+    one pallas_call per shard, exactly one psum (psum layout) or exactly
+    one psum_scatter (scattered layout) iff TP is on, policy-clean
+    casts."""
     from repro.kernels import ops
 
     findings: List[Finding] = []
-    for (dp, tp), dtype in itertools.product(mesh_grids, dtypes):
-        target = f"fno_block_nd_sharded dp{dp}xtp{tp}/{dtype}"
+    for (dp, tp), dtype, layout in itertools.product(mesh_grids, dtypes,
+                                                     layouts):
+        if tp == 1 and layout != layouts[0]:
+            continue  # layouts coincide under pure DP — lint once
+        target = f"fno_block_nd_sharded dp{dp}xtp{tp}/{dtype}/{layout}"
         mesh, fs = _mesh_or_finding(dp, tp, target)
         findings += fs
         if mesh is None:
@@ -282,21 +315,26 @@ def lint_sharded_blocks(mesh_grids: Sequence[Tuple[int, int]] = ((8, 1),
         x = jnp.zeros((dp * 2,) + x.shape[1:], x.dtype)  # batch % dp == 0
         fn = lambda *a: ops.fno_block_nd_sharded(  # noqa: E731
             *a, modes, mesh=mesh, batch_axes=("data",),
-            model_axis="model", policy=pol)
+            model_axis="model", policy=pol, tp_layout=layout)
         args = (x, wr, wi, wb, bias)
+        scat = layout == "scatter" and tp > 1
         findings += check_pallas_count(fn, args, 1, target=target)
-        findings += check_collective_budget(fn, args,
-                                            psums=1 if tp > 1 else 0,
-                                            target=target)
+        findings += check_collective_budget(
+            fn, args, psums=1 if (tp > 1 and not scat) else 0,
+            psum_scatters=1 if scat else 0, target=target)
         findings += check_cast_ownership(fn, args, pol, target=target)
     return findings
 
 
 def lint_serve(arch: str = "fno2d",
                mesh_grids: Sequence[Tuple[int, int]] = ((8, 1), (4, 2)),
-               dtypes: Sequence[str] = DTYPES) -> List[Finding]:
-    """``FNOServer.step_fn`` through the shard_map dispatch: num_layers
-    pallas_calls, one psum per layer iff TP, zero all-gathers, clean
+               dtypes: Sequence[str] = DTYPES,
+               layouts: Sequence[str] = ("scatter", "psum")
+               ) -> List[Finding]:
+    """``FNOServer.step_fn`` through the shard_map dispatch, both TP
+    layouts: num_layers pallas_calls; on the scattered layout one
+    psum_scatter per interior layer and ONE psum on the final layer, on
+    the psum layout one psum per layer (iff TP); zero all-gathers, clean
     casts."""
     from repro.configs import get_config
     from repro.configs.fno import with_precision
@@ -305,15 +343,19 @@ def lint_serve(arch: str = "fno2d",
     from repro.train import serve_fno_step as sfs
 
     findings: List[Finding] = []
-    for (dp, tp), dtype in itertools.product(mesh_grids, dtypes):
-        target = f"FNOServer.step_fn {arch} dp{dp}xtp{tp}/{dtype}"
+    for (dp, tp), dtype, layout in itertools.product(mesh_grids, dtypes,
+                                                     layouts):
+        if tp == 1 and layout != layouts[0]:
+            continue  # layouts coincide under pure DP — lint once
+        target = f"FNOServer.step_fn {arch} dp{dp}xtp{tp}/{dtype}/{layout}"
         mesh, fs = _mesh_or_finding(dp, tp, target)
         findings += fs
         if mesh is None:
             continue
         cfg = with_precision(get_config(arch, reduced=True), dtype)
         import dataclasses
-        cfg = dataclasses.replace(cfg, path="pallas", fuse_block=True)
+        cfg = dataclasses.replace(cfg, path="pallas", fuse_block=True,
+                                  tp_layout=layout)
         ctx = shd.make_context(cfg, mesh, kind="serve")
         params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
         server = sfs.FNOServer(cfg, params, ctx=ctx, max_batch=2)
@@ -321,11 +363,13 @@ def lint_serve(arch: str = "fno2d",
                        + tuple(cfg.spatial), jnp.float32)
         args = (params, {"x": xb})
         tp_on = ctx.model_axis is not None
+        scat = tp_on and layout == "scatter"
         findings += check_pallas_count(server.step_fn, args, cfg.num_layers,
                                        target=target)
         findings += check_collective_budget(
             server.step_fn, args,
-            psums=cfg.num_layers if tp_on else 0, target=target)
+            psums=(1 if scat else cfg.num_layers) if tp_on else 0,
+            psum_scatters=cfg.num_layers - 1 if scat else 0, target=target)
         findings += check_cast_ownership(server.step_fn, args,
                                          cfg.precision, target=target)
     return findings

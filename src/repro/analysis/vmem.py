@@ -178,6 +178,81 @@ def _wgrad_estimate(spatial, modes, bb, bo, bh, per_mode,
     return LaunchEstimate("wgrad", operands, scratch)
 
 
+def _rup8(v: int) -> int:
+    return -(-int(v) // 8) * 8
+
+
+def ends_launch_estimate(cfg: FNOConfig, *, batch: int = 8,
+                         policy: Optional[PrecisionPolicy] = None,
+                         plans=None) -> LaunchEstimate:
+    """The ends-fused forward launch — ``engine.fused_fnond_call`` with
+    the lifting MLP folded in as a k==0 prologue and the projection MLP
+    as an output epilogue (``cfg.fuse_ends``). Models the worst case
+    (both ends on one launch — the 1-layer shape; a lift-only first
+    layer or proj-only last layer is strictly smaller). Differences vs
+    ``block_fwd``:
+
+      * the x window carries raw ``in_channels`` (8-padded) instead of
+        hidden, and the y window carries 8-padded ``out_channels``;
+      * bo is PINNED to the 8-padded hidden — the projection epilogue
+        contracts the full post-activation hidden vector, so the o-grid
+        collapses to one step;
+      * the l2 lift window rides the k-grid (double-buffered ×2); the l1
+        and projection operands use constant index maps (×1);
+      * one extra scratch buffer: the lifted activation ``acca``
+        [lift_p, bb, *spatial] persisting across the k-loop. This term
+        scales with lift×spatial and dominates at full size (fno2d at
+        bb=1 still pays 12.5 MiB of scratch; fno3d's 64³ grid needs
+        129 MiB and does NOT fit) — fuse_ends is a small-spatial-extent
+        optimisation until the lift prologue learns to spatial-block,
+        which is why no full-size preset enables it.
+
+    Backward adds no launches: the ends-fused block's VJP re-stages the
+    composition, so this forward launch is the only one the flag adds.
+    ``check_vmem`` includes it (via ``block_launch_estimates``) exactly
+    when the config opts into fuse_ends."""
+    from repro import tuning
+    from repro.core import spectral
+    from repro.kernels.ops import _mode_pad, _pick_block
+
+    h, spatial, modes, per_mode, pol = _norm_shapes(cfg, policy)
+    r = len(modes)
+    if plans is None:
+        plans = tuning.resolve_launch_plans(
+            r, hidden=h, spatial=spatial, modes=modes, per_mode=per_mode,
+            policy=pol, override=cfg.block_plan)
+    pbb, _, pbh = plans.for_launch("block_fwd")
+    bb = _pick_block(batch, pbb)
+    bh = _pick_block(h, pbh)
+    op_ = _rup8(h)                        # bo pinned: single o-grid step
+    cinp = _rup8(cfg.in_channels)
+    lp = _rup8(cfg.lifting_dim or 2 * h)
+    coutp = _rup8(cfg.out_channels)
+
+    cb = _isz(pol.compute_dtype)
+    ab = _isz(pol.accum_dtype)
+    sp = _prod(spatial)
+    kp = _mode_pad(modes)
+    rev = _rev_modes(modes)
+    mats = spectral.fused_operand_mats(tuple(spatial), tuple(modes),
+                                       pol.spectral_dtype, False, kp)
+    wmodes = _prod((kp,) if r == 1 else tuple(modes)) if per_mode else 1
+
+    operands = 2 * (bb * cinp * sp * cb)               # raw-x window
+    operands += 2 * (2 * op_ * bh * wmodes * cb)       # wr + wi windows
+    operands += _mats_bytes(mats)                      # constant-index mats
+    operands += 2 * (bb * coutp * sp * cb)             # y window
+    operands += 2 * (op_ * bh * cb) + 2 * (op_ * cb)   # wb + bias windows
+    operands += (lp * cinp + lp) * cb                  # l1w/l1b (constant)
+    operands += 2 * (bh * lp * cb) + 2 * (bh * cb)     # l2w/l2b (k-grid)
+    operands += (lp * op_ + lp + coutp * lp + coutp) * cb  # proj (constant)
+
+    scratch = 2 * (_prod(rev) * bb * op_ * ab)         # accr + acci
+    scratch += op_ * bb * sp * ab                      # bypass accumulator
+    scratch += lp * bb * sp * ab                       # acca (lift prologue)
+    return LaunchEstimate("block_fwd_ends", operands, scratch)
+
+
 def _norm_shapes(cfg_or_shapes, policy):
     """(hidden, spatial, modes, per_mode, policy) from an FNOConfig or a
     ``(hidden, spatial, modes, per_mode)`` tuple."""
@@ -262,6 +337,10 @@ def block_launch_estimates(cfg_or_shapes, *, variant: str = "full",
         est["block_fwd"] = one("block_fwd")
     else:
         est["core"] = one("core")
+    if isinstance(cfg_or_shapes, FNOConfig) and cfg_or_shapes.fuse_ends:
+        # The ends-fused first/last-layer launch (worst case: both ends).
+        est["block_fwd_ends"] = ends_launch_estimate(
+            cfg_or_shapes, batch=batch, policy=pol, plans=plans)
     # Backward is always the fully fused adjoint (one linear map serves
     # both variants — ops._fno_block_vjp_bwd).
     est["gz_recompute"] = one("gz_recompute")

@@ -237,6 +237,26 @@ class FNOConfig:
     # tuned-cache winner (fallback: ops._BLOCK_DEFAULTS). A component of 0
     # keeps the resolved value for that axis. See configs.fno.with_block_plan.
     block_plan: Optional[Tuple[int, int, int]] = None
+    # TP inter-layer collective layout (docs/DESIGN.md §6). "scatter" (the
+    # production default) completes each interior layer's sharded k-loop
+    # with a psum_scatter that emits the NEXT layer's hidden shard directly
+    # — half the collective bytes of "psum", which all-reduces every layer
+    # to a replicated pre-activation (the PR-5 layout, kept as the parity/
+    # fallback layout). Ignored when TP is off.
+    tp_layout: str = "scatter"  # scatter | psum
+    # Opt-in comm/compute overlap for the scattered layout: the interior
+    # reduce-scatter runs as a ppermute ring (tp-1 chunk hops), whose
+    # async collective-permute steps XLA can hide under the neighboring
+    # layers' k-loop compute. Same math, same sharding — smoke-checked by
+    # scripts/overlap_smoke.py against the one-shot psum_scatter.
+    tp_overlap: bool = False
+    # Fold the lifting MLP into the FIRST fused block kernel and the
+    # projection MLP into the LAST one (engine prologue/epilogue operands)
+    # so the non-spectral ends stop round-tripping HBM. Pallas path with
+    # fuse_block only; under TP the ends stay staged (the final psum +
+    # nonlinearity sit between the last k-loop and the projection — see
+    # DESIGN.md §6) and this flag is ignored.
+    fuse_ends: bool = False
 
     @property
     def precision(self) -> PrecisionPolicy:
@@ -272,6 +292,9 @@ class FNOConfig:
                 isinstance(v, int) and v >= 0 for v in self.block_plan), (
                 f"{self.name}: block_plan must be 3 non-negative ints, got "
                 f"{self.block_plan!r}")
+        assert self.tp_layout in ("scatter", "psum"), (
+            f"{self.name}: tp_layout must be 'scatter' or 'psum', got "
+            f"{self.tp_layout!r}")
 
 
 @dataclasses.dataclass(frozen=True)

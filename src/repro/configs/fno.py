@@ -35,6 +35,24 @@ def with_fuse_block(cfg: FNOConfig, on: bool = True) -> FNOConfig:
     return dataclasses.replace(cfg, fuse_block=on)
 
 
+def with_tp_layout(cfg: FNOConfig, layout: str,
+                   overlap: bool = False) -> FNOConfig:
+    """Pick the TP inter-layer collective layout: "scatter" (the default —
+    each interior layer's psum_scatter emits the next layer's hidden shard,
+    half the collective bytes) or "psum" (the PR-5 all-reduce-every-layer
+    layout, kept as the parity/fallback layout). overlap=True additionally
+    runs the interior reduce-scatter as a ppermute ring so XLA can hide
+    the chunk hops under k-loop compute (scattered layout only)."""
+    return dataclasses.replace(cfg, tp_layout=layout, tp_overlap=overlap)
+
+
+def with_fuse_ends(cfg: FNOConfig, on: bool = True) -> FNOConfig:
+    """Fold the lifting MLP into the first fused block kernel and the
+    projection MLP into the last one (pallas path with fuse_block; ignored
+    under TP — see DESIGN.md §6)."""
+    return dataclasses.replace(cfg, fuse_ends=on)
+
+
 def with_block_plan(cfg: FNOConfig, bb: int, bo: int, bh: int) -> FNOConfig:
     """Pin an explicit (bb, bo, bh) launch plan, overriding the tuned
     cache (``repro.tuning``) component-wise — a component of 0 keeps the

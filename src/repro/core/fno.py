@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FNOConfig
 from repro.core import spectral_conv as sc
-from repro.distributed.sharding import shard_activation
+from repro.distributed.sharding import current_context, shard_activation
 
 
 def _dense_init(key, din, dout, dtype=jnp.float32):
@@ -90,24 +90,57 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
     path = path or cfg.path
     pol = cfg.precision
     x = shard_activation(x.astype(jnp.dtype(pol.compute_dtype)), "fno")
-    h = jax.nn.gelu(_dense(params["lift1"], x))
-    h = _dense(params["lift2"], shard_activation(h, "fno_lift"))
-    h = shard_activation(h, "fno_hidden")
     # Whole-block fusion (cfg.fuse_block, pallas path only): spectral +
     # bypass + bias + GELU collapse into ONE pallas_call per layer — the
     # bypass GEMM rides the engine's hidden k-loop and the activation is
     # applied in the iDFT epilogue, so the per-layer intermediates never
     # round-trip HBM. The staged composition below stays the oracle.
     fuse = cfg.fuse_block and path == "pallas"
+    # Fused MODEL ENDS (cfg.fuse_ends): fold the lifting MLP into the
+    # FIRST fused block kernel and the projection MLP into the LAST one
+    # (ops.fno_block_ends_nd) — the boundary activations never round-trip
+    # HBM and an L-layer forward still traces exactly L pallas_calls.
+    # Single-device / pure-DP only: under TP the projection needs the full
+    # post-psum hidden vector and the lift would replicate per shard, so
+    # the ends stay staged XLA ops there (DESIGN.md §6).
+    ctx = current_context()
+    ends_on = fuse and cfg.fuse_ends and (ctx is None
+                                          or ctx.model_axis is None)
+    if ends_on:
+        h = x
+    else:
+        h = jax.nn.gelu(_dense(params["lift1"], x))
+        h = _dense(params["lift2"], shard_activation(h, "fno_lift"))
+        h = shard_activation(h, "fno_hidden")
     # An explicit cfg.block_plan pins the kernel launch plans; otherwise
     # the ops layer resolves them from the tuned cache (repro.tuning).
     bkw = {"block_plan": cfg.block_plan} if cfg.block_plan else {}
-    for blk in params["blocks"]:
+    last = cfg.num_layers - 1
+    mlp = lambda p: (p["w"], p["b"])
+    for i, blk in enumerate(params["blocks"]):
         if fuse:
+            # TP collective layout per layer position (DESIGN.md §6):
+            # interior layers complete their sharded k-loop with a
+            # psum_scatter that emits the NEXT layer's hidden shard
+            # (cfg.tp_layout="scatter", half the wire bytes of a psum);
+            # the FINAL layer always psums — the projection consumes the
+            # full hidden vector, so there is no next shard to scatter
+            # into. No-op when TP is off.
+            layout = cfg.tp_layout if i < last else "psum"
+            lift = (mlp(params["lift1"]) + mlp(params["lift2"])
+                    if ends_on and i == 0 else None)
+            proj = (mlp(params["proj1"]) + mlp(params["proj2"])
+                    if ends_on and i == last else None)
             h = sc.apply_fno_block_nd(blk["spectral"], blk["bypass"], h,
                                       tuple(cfg.modes), path=path,
-                                      variant=variant, policy=pol, **bkw)
-            h = shard_activation(h, "fno_hidden")
+                                      variant=variant, policy=pol,
+                                      tp_layout=layout,
+                                      tp_overlap=cfg.tp_overlap,
+                                      ends=((lift, proj)
+                                            if lift or proj else None),
+                                      **bkw)
+            h = shard_activation(h, "fno" if (ends_on and i == last)
+                                 else "fno_hidden")
             continue
         if cfg.ndim == 1:
             s = sc.apply_spectral_1d(blk["spectral"], h, cfg.modes[0],
@@ -122,6 +155,8 @@ def apply_fno(params: Dict[str, Any], cfg: FNOConfig, x: jax.Array,
                                      **bkw)
         h = jax.nn.gelu(s.astype(h.dtype) + _dense(blk["bypass"], h))
         h = shard_activation(h, "fno_hidden")
+    if ends_on:
+        return shard_activation(h, "fno")
     out = _dense(params["proj2"], jax.nn.gelu(_dense(params["proj1"], h)))
     return shard_activation(out, "fno")
 

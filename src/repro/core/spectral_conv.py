@@ -85,6 +85,8 @@ def apply_fno_block_nd(spec_params: Dict[str, jax.Array],
                        modes: Sequence[int], *, path: str = "pallas",
                        variant: str = "full",
                        policy: Optional[PrecisionPolicy] = None,
+                       tp_layout: str = "psum", tp_overlap: bool = False,
+                       ends: Optional[Tuple] = None,
                        **kw) -> jax.Array:
     """One whole FNO block — gelu(spectral(x) + 1×1 bypass + bias) — as a
     single fused kernel on the pallas path (ops.fno_block_nd), any rank.
@@ -96,15 +98,30 @@ def apply_fno_block_nd(spec_params: Dict[str, jax.Array],
     Inside a multi-device ``sharding_context`` the block dispatches through
     ``ops.fno_block_nd_sharded``: DP over the context's batch axes, TP over
     its model axis — the engine's k-loop hidden contraction — with the TP
-    partial pre-activations psum-reduced per layer (docs/DESIGN.md §6).
+    partials completed per tp_layout ("scatter": psum_scatter emitting the
+    next layer's hidden shard; "psum": all-reduce to a replicated output —
+    docs/DESIGN.md §6). tp_layout/tp_overlap only apply to the sharded
+    dispatch; the single-device path ignores them.
+
+    ends: optional (lift, proj) param tuples (``ops.fno_block_ends_nd``)
+    folding the model's end MLPs into this block's kernel — single-device
+    and pure-DP dispatch only (core.fno guards TP off).
     """
     wb = jnp.swapaxes(byp_params["w"], 0, 1)
     ctx = shd.current_context()
+    has_ends = ends is not None and any(e is not None for e in ends)
     if path == "pallas" and ctx is not None and ctx.mesh.devices.size > 1:
         return ops.fno_block_nd_sharded(
             x, spec_params["wr"], spec_params["wi"], wb, byp_params["b"],
             tuple(modes), mesh=ctx.mesh, batch_axes=ctx.batch_axes,
-            model_axis=ctx.model_axis, variant=variant, policy=policy, **kw)
+            model_axis=ctx.model_axis, variant=variant, policy=policy,
+            tp_layout=tp_layout, tp_overlap=tp_overlap,
+            ends=ends if has_ends else None, **kw)
+    if has_ends:
+        return ops.fno_block_ends_nd(
+            x, spec_params["wr"], spec_params["wi"], wb, byp_params["b"],
+            tuple(modes), lift=ends[0], proj=ends[1], path=path,
+            variant=variant, policy=policy, **kw)
     return ops.fno_block_nd(x, spec_params["wr"], spec_params["wi"], wb,
                             byp_params["b"], tuple(modes), path=path,
                             variant=variant, policy=policy, **kw)

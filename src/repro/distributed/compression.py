@@ -7,6 +7,20 @@ feedback residuals so the quantization error is re-injected next step
 (1-bit-Adam-style guarantees). Inside shard_map the quantized tensor is what
 crosses the wire conceptually — 4× fewer bytes on the pod axis; the roofline
 effect is quantified in EXPERIMENTS.md §Perf.
+
+Scope (ISSUE 8): ``ef_psum`` is deliberately NOT wired into the FNO train
+path. ``train/train_step.py`` contains no explicit DP gradient psum — the
+step runs under jit with GSPMD sharding, and the compiler inserts the DP
+all-reduce itself from the batch-axis sharding of the loss; adding an
+explicit ``ef_psum`` inside that step would reduce the gradients TWICE
+(once quantized, once by GSPMD). The hook is for explicitly shard_mapped
+multi-pod steps where the caller owns the collective — the DCN pod axis —
+which this repo's FNO cells (single-pod DP×TP, ICI-bound) never are.
+``tests/test_distributed.py::test_fno_train_step_has_no_explicit_psum``
+pins the contract: the FNO train step traces zero collectives outside a
+sharding context (under a DP context the only traced psums are
+shard_map's own weight-grad transposes inside the fused-block dispatch —
+still none hand-written in the step).
 """
 from __future__ import annotations
 
@@ -30,7 +44,11 @@ def ef_psum(g: jax.Array, residual: jax.Array, axis_name: str
             ) -> Tuple[jax.Array, jax.Array]:
     """Error-feedback compressed psum of g over `axis_name`.
 
-    Returns (summed gradient, new residual). Call inside shard_map.
+    Returns (summed gradient, new residual). Call inside shard_map ONLY —
+    over an axis whose reduction the caller owns (a multi-pod DCN axis).
+    Never call it inside a GSPMD-sharded jit step: the compiler already
+    derives the DP gradient all-reduce there, so an explicit ef_psum
+    would double-reduce (see the module docstring).
     """
     g32 = g.astype(jnp.float32) + residual
     q, scale = compress(g32)

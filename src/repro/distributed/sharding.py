@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import threading
 from typing import Any, Dict, Optional, Tuple
 
@@ -66,6 +67,78 @@ def compat_shard_map(f, mesh, in_specs, out_specs):
         except TypeError:
             continue
     raise RuntimeError("no compatible shard_map signature found")
+
+
+# ---------------------------------------------------------------------------
+# Scattered-layout collectives (docs/DESIGN.md §6).
+#
+# The TP data path completes each interior layer's sharded hidden k-loop
+# with a reduce-scatter that emits the NEXT layer's hidden shard directly:
+# (tp-1)/tp of the tensor crosses the wire instead of the psum layout's
+# 2(tp-1)/tp (reduce + broadcast halves), and the output lands already
+# sharded P(batch, model) — no implicit re-shard. ``scatter_sum`` is the
+# collective wrapped in a custom_vjp so the backward pass gets the MIRRORED
+# collective (an all_gather along the scatter axis — the reduce-scatter's
+# exact transpose): jax.grad stays end-to-end differentiable through the
+# scattered layout without relying on the primitive's own AD rules.
+# ``ring_scatter_sum`` is the same reduction as tp-1 ppermute chunk hops —
+# XLA lowers each hop to an async collective-permute it can overlap with
+# neighboring k-loop compute (the opt-in ``tp_overlap`` mode; native AD
+# transposes the ring into the mirrored all-gather ring).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def scatter_sum(z: jax.Array, axis_name: str, axis: int = 1) -> jax.Array:
+    """Reduce-scatter ``z`` over ``axis_name`` along ``axis`` (tiled): the
+    cross-shard sum of z arrives with ``axis`` cut to 1/tp per shard —
+    shard i holds chunk i. Must be called inside shard_map."""
+    return jax.lax.psum_scatter(z, axis_name, scatter_dimension=axis,
+                                tiled=True)
+
+
+def _scatter_sum_fwd(z, axis_name, axis):
+    return scatter_sum(z, axis_name, axis), None
+
+
+def _scatter_sum_bwd(axis_name, axis, _, g):
+    # The mirrored collective: scatter_sum is linear with matrix S·Σ (chunk
+    # select ∘ cross-shard sum), whose transpose replicates the per-shard
+    # cotangent chunk back to every shard along the scatter axis — exactly
+    # a tiled all_gather.
+    return (jax.lax.all_gather(g, axis_name, axis=axis, tiled=True),)
+
+
+scatter_sum.defvjp(_scatter_sum_fwd, _scatter_sum_bwd)
+
+
+def ring_scatter_sum(z: jax.Array, axis_name: str, axis_size: int,
+                     axis: int = 1) -> jax.Array:
+    """``scatter_sum`` as a ppermute ring (bidirectionally differentiable
+    through ppermute's native transpose).
+
+    Standard ring reduce-scatter: each shard starts from the chunk that is
+    furthest (ring-wise) from its own, and over ``axis_size - 1`` steps
+    forwards its partial sum to the next shard while adding the local
+    chunk the arriving partial corresponds to; after the last hop shard i
+    holds Σ_j z_j[chunk_i]. Each hop is an independent async
+    collective-permute of 1/tp of the tensor, which XLA's latency-hiding
+    scheduler can overlap with unrelated compute — the comm/compute
+    overlap lever for the scattered TP layout (``FNOConfig.tp_overlap``).
+    """
+    n = axis_size
+    if n == 1:
+        return z
+    idx = jax.lax.axis_index(axis_name)
+    csize = z.shape[axis] // n
+
+    def chunk(c):
+        return jax.lax.dynamic_slice_in_dim(z, c * csize, csize, axis)
+
+    perm = [(j, (j + 1) % n) for j in range(n)]
+    acc = chunk((idx + n - 1) % n)
+    for s in range(2, n + 1):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        acc = acc + chunk((idx + n - s) % n)
+    return acc
 
 
 def current_context() -> Optional[ShardingContext]:

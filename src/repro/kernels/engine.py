@@ -80,6 +80,10 @@ _SEMANTICS = ("parallel", "parallel", "arbitrary")
 # signature. BUMP THE VERSION whenever a change to the kernels below moves
 # bytes in or out of a program's VMEM window (new operands, scratch shape
 # changes, grid reorderings) — stale winners would otherwise keep passing.
+# The fused-ends operands (lift/proj, PR 8) do NOT bump it: they are new
+# OPTIONAL operands absent from every launch kind the cache tunes — an
+# ends-fused launch reuses the block_fwd plan with bo pinned to the padded
+# O, so tuned winners for the default launches stay exactly valid.
 BLOCK_SIGNATURE = ("fnond-v1:grid=(b/bb,o/bo,h/bh);wgrad-grid=(o/bo,h/bh,"
                    "b/bb);acc=rev_modes@accum+bypass;launches=block_fwd,"
                    "gz_recompute,dx_adjoint,wgrad,core")
@@ -139,11 +143,26 @@ def _dgelu(z):
 # With the block epilogue (has_wb): the bypass GEMM x·W_bᵀ accumulates in a
 # third VMEM scratch during the same hidden k-loop, and the last-k epilogue
 # computes gelu(iDFT(acc) + bypass + bias) before the single ref write.
+#
+# Fused MODEL ENDS (has_lift / has_proj — the lifting and projection MLPs
+# folded into the first/last block kernel, DESIGN.md §6):
+#   * has_lift: the x ref is the RAW model input [bb, C_in, s…] (constant
+#     over the k grid). At k==0 the lift prologue computes the inner
+#     activation a = gelu(W_l1ᵀ·x + b_l1) once into a scratch that persists
+#     across the hidden loop; every k step then forms its hidden block
+#     h_k = W_l2ᵀ[k]·a + b_l2[k] in VMEM and feeds it to the DFT chain and
+#     bypass MAC — the lifted activations never round-trip HBM.
+#   * has_proj: requires a single out-channel grid step (bo = padded O,
+#     the projection contracts the FULL hidden width). The epilogue pushes
+#     the activated block output straight through the projection MLP —
+#     y = W_p2ᵀ·gelu(W_p1ᵀ·z + b_p1) + b_p2 — and the ref write emits the
+#     model OUTPUT channels [bb, C_out, s…].
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32",
                      has_wb: bool = False, has_bias: bool = False,
-                     act: str = "linear"):
+                     act: str = "linear", has_lift: bool = False,
+                     has_proj: bool = False):
     r = rank
     acc = jnp.dtype(acc_dtype)
     has_gy = act == "gelu_vjp"
@@ -154,7 +173,8 @@ def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32",
         fwd = refs[pos:pos + 2 * r]
         inv = refs[pos + 2 * r:pos + 4 * r]
         pos += 4 * r
-        wb_ref = bias_ref = gy_ref = accb = None
+        wb_ref = bias_ref = gy_ref = accb = acca = None
+        lift_refs = proj_refs = None
         if has_wb:
             wb_ref = refs[pos]
             pos += 1
@@ -164,10 +184,24 @@ def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32",
         if has_gy:
             gy_ref = refs[pos]
             pos += 1
+        if has_lift:
+            lift_refs = refs[pos:pos + 4]  # l1w [L,Ci], l1b, l2w, l2b
+            pos += 4
+        if has_proj:
+            proj_refs = refs[pos:pos + 4]  # p1w [L,O], p1b, p2w, p2b
+            pos += 4
         y_ref = refs[pos]
         accr, acci = refs[pos + 1:pos + 3]
+        pos += 3
         if has_wb:
-            accb = refs[pos + 3]
+            accb = refs[pos]
+            pos += 1
+        if has_lift:
+            acca = refs[pos]
+
+        def _colvec(ref, nd):
+            # [D,1] operand broadcast over the trailing batch/spatial dims.
+            return ref[...].reshape((-1,) + (1,) * nd)
 
         @pl.when(pl.program_id(2) == 0)
         def _init():
@@ -175,10 +209,29 @@ def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32",
             acci[...] = jnp.zeros_like(acci)
             if has_wb:
                 accb[...] = jnp.zeros_like(accb)
+            if has_lift:
+                # Lift prologue, once per (i,j): a = gelu(W_l1ᵀ·x + b_l1)
+                # → [L, bb, s…], persisted across the hidden k-loop.
+                a = jax.lax.dot_general(
+                    lift_refs[0][...], x_ref[...],
+                    (((1,), (1,)), ((), ())), preferred_element_type=acc)
+                a = a + _colvec(lift_refs[1], 1 + r)
+                acca[...] = jax.nn.gelu(a, approximate=True)
+
+        if has_lift:
+            # This k step's hidden block: h_k = W_l2ᵀ[k]·a + b_l2[k],
+            # realigned [L,bb,…]→[bb,bh,…] by a major-axes swap.
+            hk = jax.lax.dot_general(
+                lift_refs[2][...], acca[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=acc)
+            hk = hk + _colvec(lift_refs[3], 1 + r)
+            xblk = jnp.swapaxes(hk, 0, 1).astype(x_ref.dtype)
+        else:
+            xblk = x_ref[...]
 
         # Truncated forward DFT chain — the FFT writing its A-tile to
         # "shared memory" (VMEM registers).
-        ar, ai = _dft_chain(x_ref[...], fwd, r, acc)
+        ar, ai = _dft_chain(xblk, fwd, r, acc)
 
         # CGEMM over hidden (the k-loop MAC).
         wr, wi = wr_ref[...], wi_ref[...]
@@ -202,7 +255,7 @@ def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32",
             # → [bo,bb,s…]. The bo-leading layout keeps the minor (spatial)
             # dims in place so the epilogue's realign is a major-axes swap.
             accb[...] += jax.lax.dot_general(
-                wb_ref[...], x_ref[...], (((1,), (1,)), ((), ())),
+                wb_ref[...], xblk, (((1,), (1,)), ((), ())),
                 preferred_element_type=acc)
 
         @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
@@ -229,6 +282,20 @@ def _make_fwd_kernel(rank: int, per_mode: bool, acc_dtype: str = "float32",
                 z = jax.nn.gelu(z, approximate=True)
             elif act == "gelu_vjp":
                 z = gy_ref[...].astype(acc) * _dgelu(z)
+            if has_proj:
+                # Projection epilogue on the activated block output z
+                # [bb,O,s…] (bo == padded O — single j step): the pointwise
+                # MLP contracts the full hidden width in VMEM and the ref
+                # write emits the model's output channels.
+                a2 = jax.lax.dot_general(
+                    proj_refs[0][...], z.astype(acc),
+                    (((1,), (1,)), ((), ())), preferred_element_type=acc)
+                a2 = jax.nn.gelu(a2 + _colvec(proj_refs[1], 1 + r),
+                                 approximate=True)
+                out = jax.lax.dot_general(
+                    proj_refs[2][...], a2, (((1,), (0,)), ((), ())),
+                    preferred_element_type=acc)
+                z = jnp.swapaxes(out + _colvec(proj_refs[3], 1 + r), 0, 1)
             y_ref[...] = z.astype(y_ref.dtype)
 
     return kernel
@@ -242,7 +309,8 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
                      interpret: bool = False, out_dtype: str = None,
                      acc_dtype: str = "float32", wb: jax.Array = None,
                      bias: jax.Array = None, gy: jax.Array = None,
-                     act: str = "linear") -> jax.Array:
+                     act: str = "linear", lift: Tuple = None,
+                     proj: Tuple = None) -> jax.Array:
     """Whole rank-R FNO spectral layer — or FNO block — in one kernel.
 
     x: [B,H,s_1..s_R] real; w: [O,H] or [O,H,K_1..K_R]; mats: flat
@@ -261,21 +329,42 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     bias [O,1] adds per-out-channel; act picks the epilogue nonlinearity —
     "linear" (default), "gelu" (forward block), or "gelu_vjp" (backward
     recompute: requires gy [B,O,s_1..s_R] and emits gy·gelu'(z)).
+
+    Fused model ends (forward block kernels only — incompatible with gy):
+    lift = (l1w [L,C_in], l1b [L,1], l2w [H,L], l2b [H,1]) folds the
+    lifting MLP into the kernel — x is then the RAW input [B,C_in,s…] and
+    each k step derives its hidden block in VMEM (prologue at k==0 caches
+    the inner activation). proj = (p1w [L,O], p1b [L,1], p2w [C_out,L],
+    p2b [C_out,1]) folds the projection MLP into the epilogue — requires
+    bo == O (single out-channel grid step) and the result is
+    [B,C_out,s…]. These launches reuse the block_fwd tuned plan with bo
+    pinned; the default launches are unchanged (BLOCK_SIGNATURE stable).
     """
     r = x.ndim - 2
-    b, h = x.shape[:2]
+    b = x.shape[0]
+    h = lift[2].shape[0] if lift is not None else x.shape[1]
     spatial = x.shape[2:]
     o = wr.shape[0]
     per_mode = wr.ndim == 2 + r
     assert len(mats) == 4 * r, (len(mats), r)
     assert act in ("linear", "gelu", "gelu_vjp"), act
     assert (gy is not None) == (act == "gelu_vjp"), act
+    assert gy is None or (lift is None and proj is None), \
+        "fused ends are forward-only (backward is the staged vjp)"
+    assert proj is None or bo == o, \
+        "the projection epilogue contracts the full padded O: bo must == O"
     # Spectral extents in accumulator order (K_R .. K_1).
     rev_modes = tuple(m.shape[1] for m in mats[:2 * r:2])
     grid = (b // bb, o // bo, h // bh)
     zr = (0,) * r
 
-    x_spec = pl.BlockSpec((bb, bh) + spatial, lambda i, j, k: (i, k) + zr)
+    if lift is not None:
+        # Raw-input block: full (small) channel dim, constant over k.
+        x_spec = pl.BlockSpec((bb, x.shape[1]) + spatial,
+                              lambda i, j, k: (i, 0) + zr)
+    else:
+        x_spec = pl.BlockSpec((bb, bh) + spatial,
+                              lambda i, j, k: (i, k) + zr)
     if per_mode:
         w_spec = pl.BlockSpec((bo, bh) + wr.shape[2:],
                               lambda i, j, k: (j, k) + zr)
@@ -284,7 +373,13 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
         w_spec = pl.BlockSpec((bo, bh), lambda i, j, k: (j, k))
         acc_shape = (bb,) + rev_modes + (bo,)
     m_specs = [pl.BlockSpec(m.shape, lambda i, j, k: (0, 0)) for m in mats]
-    y_spec = pl.BlockSpec((bb, bo) + spatial, lambda i, j, k: (i, j) + zr)
+    out_ch = proj[2].shape[0] if proj is not None else o
+    if proj is not None:
+        y_spec = pl.BlockSpec((bb, out_ch) + spatial,
+                              lambda i, j, k: (i, 0) + zr)
+    else:
+        y_spec = pl.BlockSpec((bb, bo) + spatial,
+                              lambda i, j, k: (i, j) + zr)
 
     operands = [x, wr, wi, *mats]
     in_specs = [x_spec, w_spec, w_spec] + m_specs
@@ -300,14 +395,31 @@ def fused_fnond_call(x: jax.Array, wr: jax.Array, wi: jax.Array,
     if gy is not None:
         operands.append(gy)
         in_specs.append(y_spec)
+    if lift is not None:
+        l1w, l1b, l2w, l2b = lift
+        operands += [l1w, l1b, l2w, l2b]
+        in_specs += [
+            pl.BlockSpec(l1w.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec(l1b.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bh, l2w.shape[1]), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((bh, 1), lambda i, j, k: (k, 0)),
+        ]
+    if proj is not None:
+        operands += list(proj)
+        in_specs += [pl.BlockSpec(p.shape, lambda i, j, k: (0, 0))
+                     for p in proj]
+    if lift is not None:
+        # The persisted lift activation a [L, bb, s…] (k-invariant).
+        scratch.append(pltpu.VMEM((lift[0].shape[0], bb) + spatial, acc))
 
     return pl.pallas_call(
         _make_fwd_kernel(r, per_mode, acc_dtype, wb is not None,
-                         bias is not None, act),
+                         bias is not None, act, lift is not None,
+                         proj is not None),
         grid=grid,
         in_specs=in_specs,
         out_specs=y_spec,
-        out_shape=jax.ShapeDtypeStruct((b, o) + spatial,
+        out_shape=jax.ShapeDtypeStruct((b, out_ch) + spatial,
                                        jnp.dtype(out_dtype or x.dtype)),
         scratch_shapes=scratch,
         compiler_params=_compiler_params(dimension_semantics=_SEMANTICS),

@@ -768,17 +768,214 @@ def fno_block_nd(x: jax.Array, wr: jax.Array, wi: jax.Array, wb: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Fused MODEL ENDS (docs/DESIGN.md §6): the pointwise lifting MLP folded
+# into the FIRST fused block kernel and the projection MLP into the LAST
+# one. Both MLPs are channel-pointwise, so the lift rides the engine's
+# hidden k-loop (each k step derives its hidden block from the raw input
+# in VMEM) and the projection runs as the iDFT epilogue's tail — the
+# lifted/projected activations, ~2·B·lift·∏s elements per step at the
+# model boundary, never round-trip HBM. Forward is ONE pallas_call (so an
+# ends-fused L-layer model still traces exactly L pallas_calls); the
+# BACKWARD is the jax.vjp of the staged composition below — recompute-
+# based, XLA-fused, sharing `_block_tail`/`_fnond_xla` with the parity
+# oracles so the adjoint math can never diverge from the target.
+#
+# Scope: single-device and pure-DP dispatch only. Under TP the hidden
+# k-loop is sharded — the lift's inner activation would have to be
+# computed per-shard (replicated flops) and the projection consumes the
+# FULL hidden vector, which only exists after the final layer's psum; the
+# ends therefore stay staged XLA ops under TP (core.fno guards).
+# ---------------------------------------------------------------------------
+def _pointwise(w, b, x):
+    """Channel-pointwise dense matching core.fno._dense: y follows x's
+    dtype, the bias broadcast happens before the cast so its grad
+    reduction accumulates upstream in f32."""
+    y = jnp.einsum("bc...,cd->bd...", x, w.astype(x.dtype))
+    bb_ = b.reshape((1, -1) + (1,) * (y.ndim - 2))
+    return y + jnp.broadcast_to(bb_, y.shape).astype(x.dtype)
+
+
+def _ends_staged(x, wr, wi, wb, bias, ends, modes, path, pol):
+    """Staged lift → block → projection composition — the parity oracle
+    for the ends-fused kernel AND its backward's recompute target."""
+    lift, proj = ends
+    h = x
+    if lift is not None:
+        l1w, l1b, l2w, l2b = lift
+        h = jax.nn.gelu(_pointwise(l1w, l1b, h))
+        h = _pointwise(l2w, l2b, h)
+    z = _fno_block_oracle(h, wr, wi, wb, bias, modes, path, pol, "gelu")
+    if proj is not None:
+        p1w, p1b, p2w, p2b = proj
+        z = jax.nn.gelu(_pointwise(p1w, p1b, z))
+        z = _pointwise(p2w, p2b, z)
+    return z
+
+
+def _ends_fused_impl(x, wr, wi, wb, bias, ends, modes, plans, interpret,
+                     pol):
+    """Pad/transpose the end-MLP params to the engine layout and launch the
+    single ends-fused kernel. Reuses the block_fwd tuned plan; the proj
+    epilogue pins bo to the padded O (it contracts the full hidden width),
+    so the out-channel grid collapses to one step."""
+    cp = jnp.dtype(pol.compute_dtype)
+    lift, proj = ends
+    x, wr, wi, wb, bias = (a.astype(cp) for a in (x, wr, wi, wb, bias))
+    lift = None if lift is None else tuple(a.astype(cp) for a in lift)
+    proj = None if proj is None else tuple(a.astype(cp) for a in proj)
+    r = len(modes)
+    b = x.shape[0]
+    o = wr.shape[0]
+    h = lift[2].shape[1] if lift is not None else x.shape[1]
+    kp = _mode_pad(modes)
+    pbb, pbo, pbh = plans.fwd
+    bb = _pick_block(b, pbb)
+    bh = _pick_block(h, pbh)
+    bp, hp = _rup(b, bb), _rup(h, bh)
+    if proj is not None:
+        bo = op_ = _rup(o, 8)
+    else:
+        bo = _pick_block(o, pbo)
+        op_ = _rup(o, bo)
+    mats = spectral.fused_operand_mats(
+        tuple(x.shape[2:]), _modes_key(modes), pol.spectral_dtype, False,
+        kp)
+
+    def wpad(w):
+        if wr.ndim == 2 + r and kp:
+            w = _pad_axis(w, 2, kp)
+        return _pad_axis(_pad_axis(w, 0, op_), 1, hp)
+
+    wbp = _pad_axis(_pad_axis(wb, 0, op_), 1, hp)
+    biasp = _pad_axis(bias[:, None], 0, op_)
+    col = lambda v, to: _pad_axis(v[:, None], 0, to)
+    mat = lambda w, rto, cto: _pad_axis(
+        _pad_axis(jnp.swapaxes(w, 0, 1), 0, rto), 1, cto)
+    engine_lift = None
+    if lift is not None:
+        l1w, l1b, l2w, l2b = lift
+        cinp = _rup(x.shape[1], 8)
+        lp = _rup(l1w.shape[1], 8)
+        xpad = _pad_axis(_pad_axis(x, 0, bp), 1, cinp)
+        engine_lift = (mat(l1w, lp, cinp), col(l1b, lp),
+                       mat(l2w, hp, lp), col(l2b, hp))
+    else:
+        xpad = _pad_axis(_pad_axis(x, 0, bp), 1, hp)
+    engine_proj = None
+    if proj is not None:
+        p1w, p1b, p2w, p2b = proj
+        lp2 = _rup(p1w.shape[1], 8)
+        coutp = _rup(p2w.shape[1], 8)
+        engine_proj = (mat(p1w, lp2, op_), col(p1b, lp2),
+                       mat(p2w, coutp, lp2), col(p2b, coutp))
+    y = engine.fused_fnond_call(xpad, wpad(wr), wpad(wi), *mats,
+                                bb=bb, bo=bo, bh=bh, interpret=interpret,
+                                acc_dtype=pol.accum_dtype, wb=wbp,
+                                bias=biasp, act="gelu", lift=engine_lift,
+                                proj=engine_proj)
+    cout = proj[3].shape[0] if proj is not None else o
+    return y[:b, :cout]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _fno_block_ends_pallas(x, wr, wi, wb, bias, ends, modes, plans,
+                           interpret, pol):
+    return _ends_fused_impl(x, wr, wi, wb, bias, ends, modes, plans,
+                            interpret, pol)
+
+
+def _ends_vjp_fwd(x, wr, wi, wb, bias, ends, modes, plans, interpret, pol):
+    y = _ends_fused_impl(x, wr, wi, wb, bias, ends, modes, plans,
+                         interpret, pol)
+    return y, (x, wr, wi, wb, bias, ends)
+
+
+def _ends_vjp_bwd(modes, plans, interpret, pol, res, gy):
+    # The staged composition is the adjoint target: jax.vjp recomputes the
+    # forward through the XLA-fused staging (the same math the kernel
+    # fuses) and transposes it — every cotangent lands at its primal's
+    # dtype because the casts live inside `_ends_staged`'s callees.
+    x, wr, wi, wb, bias, ends = res
+    _, vjp = jax.vjp(
+        lambda x_, wr_, wi_, wb_, b_, e_: _ends_staged(
+            x_, wr_, wi_, wb_, b_, e_, modes, "xla", pol),
+        x, wr, wi, wb, bias, ends)
+    return vjp(gy.astype(jnp.dtype(pol.compute_dtype)))
+
+
+_fno_block_ends_pallas.defvjp(_ends_vjp_fwd, _ends_vjp_bwd)
+
+
+def fno_block_ends_nd(x: jax.Array, wr: jax.Array, wi: jax.Array,
+                      wb: jax.Array, bias: jax.Array,
+                      modes: Sequence[int], *,
+                      lift: Optional[Tuple] = None,
+                      proj: Optional[Tuple] = None,
+                      path: str = "pallas", variant: str = "full",
+                      bb: int = 0, bo: int = 0, bh: int = 0,
+                      interpret: Optional[bool] = None,
+                      policy: Optional[PrecisionPolicy] = None,
+                      block_plan: Optional[Tuple[int, int, int]] = None
+                      ) -> jax.Array:
+    """``fno_block_nd`` with the model's end MLPs folded into the kernel.
+
+    lift = (l1w [C_in,L], l1b [L], l2w [L,H], l2b [H]) — core.fno's
+    lift1/lift2 params; x is then the RAW model input [B,C_in,s…].
+    proj = (p1w [H,L], p1b [L], p2w [L,C_out], p2b [C_out]) — proj1/proj2;
+    the result is the model output [B,C_out,s…]. Either end may be None
+    (first vs last layer of a multi-layer model); both on a 1-layer model.
+
+    path="pallas" runs ONE pallas_call (variant "full" only) and is
+    differentiable: the custom_vjp backward is the jax.vjp of the staged
+    composition — recompute-based, so nothing extra is saved for backward.
+    path="ref"/"xla" are the staged parity oracles.
+    """
+    modes = _modes_key(modes)
+    ends = (lift, proj)
+    pol = policy or _default_policy(x, wr)
+    if path in ("ref", "xla"):
+        return _ends_staged(x, wr, wi, wb, bias, ends, modes, path, pol)
+    assert variant == "full", \
+        "fused ends require the full-fusion variant (partial stays staged)"
+    hidden = lift[2].shape[1] if lift is not None else x.shape[1]
+    override = tuple(block_plan) if block_plan else None
+    plans = resolve_launch_plans(
+        len(modes), hidden=hidden, out=wr.shape[0],
+        spatial=tuple(x.shape[2:]), modes=modes,
+        per_mode=wr.ndim == 2 + len(modes), policy=pol, override=override)
+    plans = plans.with_override(bb, bo, bh)
+    return _fno_block_ends_pallas(x, wr, wi, wb, bias, ends, modes, plans,
+                                  _interpret(interpret), pol)
+
+
+# ---------------------------------------------------------------------------
 # DP×TP shard_map dispatch of the fused block (docs/DESIGN.md §6).
 #
 # DP shards the leading batch axis over `batch_axes`; TP shards the HIDDEN
 # axis — the engine's k-loop contraction — over `model_axis`, so every
 # shard runs the SAME fused kernel on its hidden slice and produces a
-# partial pre-activation. The partials are completed with one lax.psum per
-# layer over the model axis, and only then do bias + GELU apply (a
-# nonlinearity cannot commute past a sharded contraction), so the TP
-# epilogue runs as XLA ops on the reduced value while the kernel keeps
-# act="linear". Every spec is guard_spec-ed: an axis that does not divide
-# its dim degrades to replication instead of erroring.
+# partial pre-activation. Two layouts complete the sharded contraction:
+#
+#   tp_layout="scatter" (production): a psum_scatter over the model axis
+#     emits the NEXT layer's hidden shard directly — (tp-1)/tp of the
+#     tensor crosses the wire and the output lands already sharded
+#     P(batch, model), so the inter-layer re-shard disappears. The
+#     collective is ``sharding.scatter_sum`` — a custom_vjp whose backward
+#     is the mirrored all_gather — so jax.grad stays end-to-end
+#     differentiable through the scattered layout. tp_overlap=True runs
+#     the same reduction as a ppermute ring (tp-1 async chunk hops XLA
+#     can hide under neighboring k-loop compute).
+#
+#   tp_layout="psum" (legacy/final-layer): ONE lax.psum per layer on the
+#     pre-activation — 2(tp-1)/tp wire bytes, replicated output. The FINAL
+#     TP layer always uses this: the projection consumes the full hidden
+#     vector, so there is no next shard to scatter into.
+#
+# Either way bias + GELU apply only after the cross-shard reduction (a
+# nonlinearity cannot commute past a sharded contraction), as XLA ops on
+# the reduced value while the kernel keeps act="linear". Every spec is
+# guard_spec-ed: an axis that does not divide its dim degrades to
+# replication instead of erroring.
 # ---------------------------------------------------------------------------
 def fno_block_nd_sharded(x: jax.Array, wr: jax.Array, wi: jax.Array,
                          wb: jax.Array, bias: jax.Array,
@@ -789,17 +986,34 @@ def fno_block_nd_sharded(x: jax.Array, wr: jax.Array, wi: jax.Array,
                          bh: int = 0, interpret: Optional[bool] = None,
                          policy: Optional[PrecisionPolicy] = None,
                          act: str = "gelu",
+                         tp_layout: str = "psum",
+                         tp_overlap: bool = False,
+                         ends: Optional[Tuple] = None,
                          block_plan: Optional[Tuple[int, int, int]] = None
                          ) -> jax.Array:
     """``fno_block_nd`` under shard_map on a (DP×TP) mesh — the production
     dispatch behind ``core.spectral_conv.apply_fno_block_nd`` whenever a
     ``sharding_context`` is active. Fully differentiable: shard_map
-    transposes the psum and replication for the backward, and each shard's
-    backward stays on the fused adjoint/wgrad kernels (custom_vjp)."""
+    transposes the collectives for the backward (psum → replication;
+    scatter_sum carries its own mirrored-all_gather custom_vjp), and each
+    shard's backward stays on the fused adjoint/wgrad kernels.
+
+    tp_layout: "psum" replicates the layer output (one all-reduce);
+    "scatter" emits it sharded P(batch, model) over the hidden axis via
+    psum_scatter — half the wire bytes; the caller threads "scatter" for
+    interior TP layers and "psum" for the final one (core.fno.apply_fno).
+    tp_overlap=True (scattered only) uses the ppermute-ring reduction.
+
+    ends: optional (lift, proj) tuple for ``fno_block_ends_nd`` — pure-DP
+    meshes only (the end params replicate across shards); core.fno keeps
+    the ends staged whenever TP is on.
+    """
     from jax.sharding import PartitionSpec as P
 
-    from repro.distributed.sharding import compat_shard_map, guard_spec
+    from repro.distributed.sharding import (compat_shard_map, guard_spec,
+                                            ring_scatter_sum, scatter_sum)
 
+    assert tp_layout in ("psum", "scatter"), tp_layout
     modes = _modes_key(modes)
     r = len(modes)
     sp0 = (None,) * r
@@ -807,30 +1021,57 @@ def fno_block_nd_sharded(x: jax.Array, wr: jax.Array, wi: jax.Array,
     b_axes = tuple(a for a in batch_axes if a in mesh.shape)
     b_ent = (b_axes if len(b_axes) > 1 else b_axes[0]) if b_axes else None
     tp = mesh.shape.get(model_axis, 1) if model_axis else 1
+    o = wr.shape[0]
     xspec = guard_spec(P(b_ent, model_axis if tp > 1 else None, *sp0),
                        x.shape, mesh)
     tp_on = tp > 1 and xspec[1] is not None
+    # The scattered layout additionally needs the OUTPUT channel dim to
+    # divide tp (each shard keeps 1/tp of it); degrade to psum otherwise.
+    scatter = tp_layout == "scatter" and tp_on and o % tp == 0
     h_ent = model_axis if tp_on else None
     wspec = guard_spec(P(None, h_ent, *((None,) * (wr.ndim - 2))),
                        wr.shape, mesh)
     wbspec = guard_spec(P(None, h_ent), wb.shape, mesh)
-    out_spec = P(xspec[0], None, *sp0)
+    bspec = P(model_axis) if scatter else P(None)
+    out_spec = P(xspec[0], model_axis if scatter else None, *sp0)
     kw = dict(variant=variant, bb=bb, bo=bo, bh=bh, interpret=interpret,
               policy=pol, block_plan=block_plan)
+    has_ends = ends is not None and any(e is not None for e in ends)
+    if has_ends:
+        # Ends replicate — pure-DP dispatch only (core.fno guards TP off).
+        assert not tp_on and act == "gelu", (tp_on, act)
+        ends_specs = jax.tree_util.tree_map(
+            lambda a: P(*(None,) * a.ndim), ends)
+        fn = compat_shard_map(
+            lambda xl, wrl, wil, wbl, bl, el: fno_block_ends_nd(
+                xl, wrl, wil, wbl, bl, modes, lift=el[0], proj=el[1],
+                path="pallas", **kw),
+            mesh, in_specs=(xspec, wspec, wspec, wbspec, bspec, ends_specs),
+            out_specs=out_spec)
+        return fn(x, wr, wi, wb, bias, ends)
 
     def local(xl, wrl, wil, wbl, bl):
         if not tp_on:
             return fno_block_nd(xl, wrl, wil, wbl, bl, modes,
                                 path="pallas", act=act, **kw)
         # Partial pre-activations emit at the ACCUMULATOR dtype (f32 under
-        # the bf16 policy) so the cross-shard contraction — psum + bias +
-        # activation — stays f32 end-to-end; the single down-cast to the
-        # compute dtype is the return (same contract as the in-kernel
-        # epilogue it replaces).
-        z = fno_block_nd(xl, wrl, wil, wbl, jnp.zeros_like(bl), modes,
+        # the bf16 policy) so the cross-shard contraction — reduction +
+        # bias + activation — stays f32 end-to-end; the single down-cast
+        # to the compute dtype is the return (same contract as the
+        # in-kernel epilogue it replaces).
+        # The kernel's bias slot gets a full-width zero (under the
+        # scattered layout bl is this shard's 1/tp slice — the real bias
+        # applies only after the reduction, on the scattered chunk).
+        z = fno_block_nd(xl, wrl, wil, wbl,
+                         jnp.zeros((wrl.shape[0],), bl.dtype), modes,
                          path="pallas", act="linear",
                          out_dtype=pol.accum_dtype, **kw)
-        z = jax.lax.psum(z, model_axis)
+        if scatter:
+            # bl arrives pre-sliced to this shard's chunk (bspec).
+            z = (ring_scatter_sum(z, model_axis, tp) if tp_overlap
+                 else scatter_sum(z, model_axis))
+        else:
+            z = jax.lax.psum(z, model_axis)
         z = z + bl.astype(z.dtype).reshape((1, -1) + (1,) * r)
         if act == "gelu":
             z = jax.nn.gelu(z, approximate=True)
@@ -838,6 +1079,6 @@ def fno_block_nd_sharded(x: jax.Array, wr: jax.Array, wi: jax.Array,
 
     fn = compat_shard_map(
         local, mesh,
-        in_specs=(xspec, wspec, wspec, wbspec, P(None)),
+        in_specs=(xspec, wspec, wspec, wbspec, bspec),
         out_specs=out_spec)
     return fn(x, wr, wi, wb, bias)

@@ -119,16 +119,22 @@ def run(args) -> dict:
         assert np.isfinite(np.asarray(y)).all(), "non-finite serve output"
 
     samples = int(sizes.sum())
+    plan = server.collective_plan()
     out = {
         "arch": args.arch, "path": args.path, "fuse_block": fuse,
         "dp": dp, "tp": tp, "buckets": list(server.buckets),
         "requests": args.requests, "samples": samples,
         "padded": server.stats["padded"],
         "samples_per_s": samples / max(dt, 1e-9),
+        "collective_plan": plan,
     }
     print(f"serve_fno arch={args.arch} mesh=dp{dp}xtp{tp} path={args.path} "
           f"fuse_block={fuse} dtype={args.dtype} "
           f"buckets={list(server.buckets)}")
+    print(f"  collective plan: interior={plan['interior_collective']} "
+          f"final={plan['final_collective']} "
+          f"layout={plan['tp_layout']} overlap={plan['tp_overlap']} "
+          f"wire={plan['wire_bytes_per_fwd'] / 2**10:.1f}KiB/fwd")
     print(f"  served {args.requests} requests / {samples} samples in "
           f"{dt*1e3:.0f} ms ({out['samples_per_s']:.1f} samples/s, "
           f"{server.stats['padded']} padded), all outputs finite")

@@ -302,3 +302,44 @@ def fno_model_bytes(cfg, batch: int, *, variant: str = "full",
         n_params = cfg.param_count()
         total += 7 * n_params * pb  # AdamW: r/w params + 2 moments, read g
     return float(total)
+
+
+def fno_collective_bytes(cfg, dp: int, tp: int, *, scattered: bool = True,
+                         batch: int = 8) -> Dict[str, float]:
+    """Per-device ICI wire bytes of the TP collectives in one sharded FNO
+    forward (the collective side of the roofline for the DP×TP serve
+    path — docs/DESIGN.md §6).
+
+    Each fused block's sharded k-loop produces per-device partial sums of
+    the full hidden activation T = (batch/dp)·hidden·∏spatial·compute
+    bytes. Completing them costs, per device, on a tp-device ring:
+
+      * ``psum`` (all-reduce, the PR-5 every-layer layout):
+        2·(tp-1)/tp · T — reduce-scatter + all-gather under the hood;
+      * ``reduce-scatter`` (the scattered layout): (tp-1)/tp · T — the
+        interior layer emits the NEXT layer's hidden shard directly and
+        skips the gather half, exactly 0.5× the psum wire bytes. The
+        ppermute ring (cfg.tp_overlap) moves the same bytes in tp-1
+        chunk hops — overlap changes the schedule, not the traffic.
+
+    scattered=True models cfg.tp_layout="scatter": num_layers-1 interior
+    reduce-scatters + the final layer's psum (the projection consumes the
+    full hidden vector, so the last layer always all-reduces).
+    scattered=False models tp_layout="psum": num_layers psums.
+
+    Mirrors the runtime's degradation rules: tp<=1 or hidden % tp != 0
+    folds TP away (no collectives — ``make_context``). Returns a dict
+    {"interior_per_layer", "final", "total"} so callers can surface the
+    per-layer ratio directly (bench_e2e.run_serve's derived column).
+    """
+    import math
+    if tp <= 1 or cfg.hidden % tp != 0:
+        return {"interior_per_layer": 0.0, "final": 0.0, "total": 0.0}
+    cb = dtype_bytes(cfg.precision.compute_dtype)
+    t = (batch / max(dp, 1)) * cfg.hidden * math.prod(cfg.spatial) * cb
+    psum = 2.0 * (tp - 1) / tp * t
+    interior = ((tp - 1) / tp * t) if scattered else psum
+    n_interior = max(cfg.num_layers - 1, 0)
+    final = psum if cfg.num_layers > 0 else 0.0
+    return {"interior_per_layer": interior, "final": final,
+            "total": n_interior * interior + final}

@@ -105,6 +105,40 @@ class FNOServer:
         self._step = jax.jit(step_fn)
         self.stats = {"requests": 0, "samples": 0, "padded": 0}
 
+    def collective_plan(self) -> Dict[str, object]:
+        """The serving step's TP collective plan as metadata (ISSUE 8) —
+        what the serve driver prints and ops dashboards scrape: the
+        layout, whether the interior reduce-scatter runs as the ppermute
+        ring (cfg.tp_overlap), the per-layer collective kinds, and the
+        modeled per-device ICI wire bytes per forward at the SMALLEST
+        bucket (``roofline.analysis.fno_collective_bytes`` — the
+        scattered layout moves exactly half the psum layout's interior
+        bytes). Pure metadata; never traces the step."""
+        from repro.roofline.analysis import fno_collective_bytes
+
+        ctx, cfg = self.ctx, self.cfg
+        tp_on = ctx is not None and ctx.model_axis is not None
+        dp = 1
+        if ctx is not None:
+            for a in ctx.batch_axes:
+                dp *= ctx.mesh.shape.get(a, 1)
+        tp = ctx.mesh.shape.get(ctx.model_axis, 1) if tp_on else 1
+        layout = cfg.tp_layout if tp_on else None
+        scattered = layout == "scatter"
+        wire = fno_collective_bytes(cfg, dp, tp, scattered=scattered,
+                                    batch=self.buckets[0])
+        interior = ("none" if not tp_on else
+                    ("ppermute-ring" if scattered and cfg.tp_overlap
+                     else "psum_scatter" if scattered else "psum"))
+        return {
+            "tp_layout": layout, "tp_overlap": tp_on and cfg.tp_overlap,
+            "dp": dp, "tp": tp,
+            "interior_collective": interior,
+            "final_collective": "psum" if tp_on else "none",
+            "wire_bytes_per_fwd": wire["total"],
+            "wire_bytes_interior_layer": wire["interior_per_layer"],
+        }
+
     def __call__(self, x: jax.Array) -> jax.Array:
         """Serve one request batch x [n, C_in, *spatial] -> [n, C_out, …].
 

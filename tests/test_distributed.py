@@ -288,6 +288,238 @@ def test_fno_dp_tp_grads_match_single(subproc):
     """)
 
 
+def test_fno_train_step_has_no_explicit_psum():
+    # The ef_psum scope contract (distributed/compression.py): the FNO
+    # train step hand-writes NO gradient collective — outside a sharding
+    # context the whole step traces zero collectives. Under a DP jit the
+    # all-reduce is GSPMD's (derived from the batch-axis sharding; the
+    # only trace-level psums a DP context adds are shard_map's OWN
+    # weight-grad transposes inside the fused-block dispatch). Wiring
+    # tree_ef_psum into the step would both break this budget and
+    # double-reduce.
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import jaxpr_lint as jl
+    from repro.configs import get_config
+    from repro.core import fno as fno_mod
+    from repro.optim import AdamW
+    from repro.optim.schedule import constant
+    from repro.train.train_step import make_train_step
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=constant(1e-3))
+    state = opt.init(params)
+    batch = {"x": jnp.zeros((2, cfg.in_channels) + tuple(cfg.spatial)),
+             "y": jnp.zeros((2, cfg.out_channels) + tuple(cfg.spatial))}
+    step = make_train_step(cfg, opt, fno_path="pallas")
+    counts = jl.collective_counts(step, params, state, batch)
+    assert counts == {}, counts
+
+
+def test_fno_collective_bytes_model():
+    """The roofline collective-traffic model (ISSUE 8) — pure math, no
+    devices: scattered interior layers move exactly HALF the psum
+    layout's wire bytes, the final layer always all-reduces, and TP that
+    folds away (tp=1 or hidden % tp != 0) costs zero."""
+    import math
+
+    from repro.configs import get_config
+    from repro.configs.fno import with_precision
+    from repro.roofline.analysis import fno_collective_bytes
+
+    cfg = get_config("fno2d", reduced=True)
+    sc = fno_collective_bytes(cfg, 4, 2, scattered=True, batch=8)
+    ps = fno_collective_bytes(cfg, 4, 2, scattered=False, batch=8)
+    assert sc["interior_per_layer"] == 0.5 * ps["interior_per_layer"]
+    assert sc["final"] == ps["final"]  # the projection needs full hidden
+    L = cfg.num_layers
+    assert ps["total"] == L * ps["interior_per_layer"]
+    assert sc["total"] == (L - 1) * sc["interior_per_layer"] + sc["final"]
+    # exact ring wire bytes: T = (8/4)·hidden·∏spatial·4 B, tp=2
+    t = 2 * cfg.hidden * math.prod(cfg.spatial) * 4
+    assert ps["interior_per_layer"] == 2 * (2 - 1) / 2 * t
+    # bf16 activations halve the collective traffic
+    sc16 = fno_collective_bytes(with_precision(cfg, "bf16"), 4, 2, batch=8)
+    assert sc16["total"] == 0.5 * sc["total"]
+    # degradation mirrors make_context
+    assert fno_collective_bytes(cfg, 8, 1)["total"] == 0.0
+    assert fno_collective_bytes(cfg, 2, 3)["total"] == 0.0  # 16 % 3 != 0
+
+
+def test_fno_tp_scatter_layout_parity_and_budget(subproc):
+    # ISSUE 8 tentpole: the scattered TP layout (interior layers complete
+    # their sharded k-loop with a psum_scatter emitting the NEXT layer's
+    # hidden shard; only the final layer psums) — fwd + grad parity vs the
+    # single-device XLA oracle, and the exact collective budget.
+    subproc("""
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+    from repro.analysis import jaxpr_lint as jl
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    assert cfg.tp_layout == "scatter"  # scattered is the default layout
+    key = jax.random.PRNGKey(0)
+    params = fno_mod.init_fno(key, cfg)
+    x = jax.random.normal(key, (8, cfg.in_channels) + tuple(cfg.spatial))
+    y_ref = fno_mod.apply_fno(params, cfg, x, path="xla")
+    g_ref = jax.grad(lambda p: jnp.sum(
+        fno_mod.apply_fno(p, cfg, x, path="xla") ** 2))(params)
+    denom = max(float(jnp.abs(l).max())
+                for l in jax.tree_util.tree_leaves(g_ref))
+
+    for dp, tp in ((4, 2), (2, 4)):
+        mesh = make_debug_mesh(dp, tp)
+        ctx = shd.make_context(cfg, mesh, kind="serve")
+        assert ctx.model_axis == "model"
+        # fresh closures per mesh: jax.make_jaxpr caches on function
+        # identity + avals, and the thread-local sharding context is
+        # invisible to that cache — a reused closure would replay the
+        # previous mesh's trace.
+        def fwd(p, xx, _ctx=ctx):
+            with shd.sharding_context(_ctx):
+                return fno_mod.apply_fno(p, cfg, xx, path="pallas")
+        y = jax.jit(fwd)(params, x)
+        err = float(jnp.abs(y - y_ref).max())
+        assert err < 2e-4, (dp, tp, err)
+        g = jax.jit(jax.grad(
+            lambda p, xx, _f=fwd: jnp.sum(_f(p, xx) ** 2)))(params, x)
+        gerr = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree_util.tree_leaves(g),
+            jax.tree_util.tree_leaves(g_ref))) / denom
+        assert gerr < 2e-4, (dp, tp, gerr)
+        counts = jl.collective_counts(fwd, params, x)
+        rs = counts.get("reduce_scatter", 0) + counts.get("psum_scatter", 0)
+        assert rs == cfg.num_layers - 1, counts  # one per INTERIOR layer
+        assert counts.get("psum", 0) == 1, counts  # final layer only
+        assert jl.pallas_count(fwd, params, x) == cfg.num_layers
+        print(f"dp{dp}xtp{tp}: fwd={err:.2e} relgrad={gerr:.2e} "
+              f"coll={counts}")
+    print("scattered TP layout parity + budget OK")
+    """)
+
+
+def test_fno_tp_layouts_agree_and_overlap_ring(subproc):
+    # The three TP collective plans are the same math: psum layout,
+    # scattered layout, and the scattered layout with the ppermute ring
+    # (tp_overlap) all match bitwise-tight; the ring traces tp-1
+    # ppermutes per interior layer in place of the one-shot
+    # reduce-scatter. Grads flow through the ring natively (ppermute
+    # transposes to ppermute).
+    subproc("""
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+    from repro.analysis import jaxpr_lint as jl
+
+    cfg0 = dataclasses.replace(get_config("fno2d", reduced=True),
+                               path="pallas", fuse_block=True)
+    key = jax.random.PRNGKey(0)
+    params = fno_mod.init_fno(key, cfg0)
+    x = jax.random.normal(key, (8, cfg0.in_channels) + tuple(cfg0.spatial))
+    dp, tp = 2, 4
+    mesh = make_debug_mesh(dp, tp)
+
+    outs, grads, colls = {}, {}, {}
+    for layout, overlap in (("psum", False), ("scatter", False),
+                            ("scatter", True)):
+        cfg = dataclasses.replace(cfg0, tp_layout=layout,
+                                  tp_overlap=overlap)
+        ctx = shd.make_context(cfg, mesh, kind="serve")
+        def fwd(p, xx, _cfg=cfg, _ctx=ctx):  # fresh closure per variant
+            with shd.sharding_context(_ctx):
+                return fno_mod.apply_fno(p, _cfg, xx, path="pallas")
+        name = layout + ("+ring" if overlap else "")
+        outs[name] = jax.jit(fwd)(params, x)
+        grads[name] = jax.jit(jax.grad(
+            lambda p, xx, _f=fwd: jnp.sum(_f(p, xx) ** 2)))(params, x)
+        colls[name] = jl.collective_counts(fwd, params, x)
+
+    for name in ("scatter", "scatter+ring"):
+        err = float(jnp.abs(outs[name] - outs["psum"]).max())
+        assert err < 1e-5, (name, err)
+        gerr = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree_util.tree_leaves(grads[name]),
+            jax.tree_util.tree_leaves(grads["psum"])))
+        assert gerr < 1e-4, (name, gerr)
+    L = cfg0.num_layers
+    assert colls["psum"] == {"psum": L}, colls["psum"]
+    assert colls["scatter"].get("ppermute", 0) == 0, colls["scatter"]
+    ring = colls["scatter+ring"]
+    assert ring.get("ppermute", 0) == (tp - 1) * (L - 1), ring
+    assert ring.get("reduce_scatter", 0) == 0 and \
+        ring.get("psum_scatter", 0) == 0, ring
+    assert ring.get("psum", 0) == 1, ring
+    print("layout equivalence + overlap ring OK", colls)
+    """)
+
+
+def test_fno_fused_ends_sharded_dispatch(subproc):
+    # cfg.fuse_ends under shard_map: pure DP keeps the ends fused (zero
+    # collectives, num_layers pallas_calls, parity); with TP on, the guard
+    # in core.fno falls back to staged ends while the scattered interior
+    # collectives stay intact.
+    subproc("""
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+    from repro.analysis import jaxpr_lint as jl
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True,
+                              fuse_ends=True)
+    key = jax.random.PRNGKey(0)
+    params = fno_mod.init_fno(key, cfg)
+    x = jax.random.normal(key, (8, cfg.in_channels) + tuple(cfg.spatial))
+    y_ref = fno_mod.apply_fno(params, cfg, x, path="xla")
+
+    # pure DP (8x1) and DP with the model axis folded (4x2, strategy=dp):
+    # ends stay fused.
+    for mesh, strategy in ((make_debug_mesh(8, 1), None),
+                           (make_debug_mesh(4, 2), "dp")):
+        ctx = shd.make_context(cfg, mesh, fno_strategy=strategy,
+                               kind="serve")
+        assert ctx.model_axis is None
+        def fwd(p, xx, _ctx=ctx):  # fresh closure per context
+            with shd.sharding_context(_ctx):
+                return fno_mod.apply_fno(p, cfg, xx, path="pallas")
+        y = jax.jit(fwd)(params, x)
+        err = float(jnp.abs(y - y_ref).max())
+        assert err < 2e-4, err
+        assert jl.pallas_count(fwd, params, x) == cfg.num_layers
+        assert jl.collective_counts(fwd, params, x) == {}
+
+    # TP on: fuse_ends is ignored (the projection needs the full
+    # post-psum hidden vector), the scattered budget is unchanged.
+    ctx = shd.make_context(cfg, make_debug_mesh(4, 2), kind="serve")
+    assert ctx.model_axis == "model"
+    def fwd_tp(p, xx, _ctx=ctx):
+        with shd.sharding_context(_ctx):
+            return fno_mod.apply_fno(p, cfg, xx, path="pallas")
+    y = jax.jit(fwd_tp)(params, x)
+    assert float(jnp.abs(y - y_ref).max()) < 2e-4
+    counts = jl.collective_counts(fwd_tp, params, x)
+    rs = counts.get("reduce_scatter", 0) + counts.get("psum_scatter", 0)
+    assert rs == cfg.num_layers - 1 and counts.get("psum", 0) == 1, counts
+    print("fused ends sharded dispatch OK")
+    """)
+
+
 def test_fno_leaf_specs_and_guard(subproc):
     subproc("""
     import jax, numpy as np

@@ -131,6 +131,74 @@ def test_block_3d_rank_generic():
     _allclose_rel(y, y_xla, 2e-4)
 
 
+@pytest.mark.parametrize("arch", ["fno1d", "fno2d", "fno3d"])
+def test_apply_fno_fused_ends_parity(arch):
+    """cfg.fuse_ends folds the lifting MLP into the FIRST fused block
+    kernel and the projection MLP into the LAST one (ISSUE 8): output and
+    jax.grad match the staged XLA oracle, and the forward still traces
+    exactly num_layers pallas_calls — the end MLPs add ZERO launches."""
+    from repro.core import fno as fno_mod
+
+    cfg0 = get_config(arch, reduced=True)
+    cfg = dataclasses.replace(cfg0, fuse_block=True, fuse_ends=True)
+    params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    x = _mk(rng, 2, cfg.in_channels, *cfg.spatial)
+
+    y = fno_mod.apply_fno(params, cfg, x, path="pallas")
+    y_xla = fno_mod.apply_fno(params, cfg0, x, path="xla")
+    _allclose_rel(y, y_xla, 2e-4)
+
+    loss = lambda p, path, c: jnp.sum(
+        fno_mod.apply_fno(p, c, x, path=path) ** 2)
+    g = jax.grad(loss)(params, "pallas", cfg)
+    g_ref = jax.grad(loss)(params, "xla", cfg0)
+    for a, b in zip(jax.tree_util.tree_leaves(g),
+                    jax.tree_util.tree_leaves(g_ref)):
+        _allclose_rel(a, b, 2e-4)
+
+    fn = lambda xx: fno_mod.apply_fno(params, cfg, xx, path="pallas")
+    assert count_pallas_calls(fn, x) == cfg.num_layers
+
+
+def test_fused_ends_one_layer_single_call():
+    """The 1-layer degenerate case: lift prologue AND projection epilogue
+    ride the SAME kernel — the whole model is ONE pallas_call."""
+    from repro.core import fno as fno_mod
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              fuse_block=True, fuse_ends=True, num_layers=1)
+    params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    x = _mk(rng, 2, cfg.in_channels, *cfg.spatial)
+    y = fno_mod.apply_fno(params, cfg, x, path="pallas")
+    y_xla = fno_mod.apply_fno(
+        params, dataclasses.replace(cfg, fuse_ends=False), x, path="xla")
+    _allclose_rel(y, y_xla, 2e-4)
+    fn = lambda xx: fno_mod.apply_fno(params, cfg, xx, path="pallas")
+    assert count_pallas_calls(fn, x) == 1
+
+
+def test_fused_ends_bf16_matches_staged_pallas():
+    """bf16 policy under fuse_ends: parity against the bf16 staged-ends
+    pallas path (the apples-to-apples reference — both quantize the same
+    boundary activations; the f32 oracle differs by inherent bf16
+    rounding, covered at f32 above)."""
+    from repro.configs.fno import with_precision
+    from repro.core import fno as fno_mod
+
+    cfg0 = with_precision(get_config("fno2d", reduced=True), "bf16")
+    cfg0 = dataclasses.replace(cfg0, fuse_block=True)
+    cfg = dataclasses.replace(cfg0, fuse_ends=True)
+    params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    x = _mk(rng, 2, cfg.in_channels, *cfg.spatial)
+    y = fno_mod.apply_fno(params, cfg, x, path="pallas")
+    y_ref = fno_mod.apply_fno(params, cfg0, x, path="pallas")
+    assert y.dtype == jnp.bfloat16
+    _allclose_rel(y.astype(jnp.float32), y_ref.astype(jnp.float32), 2e-2)
+
+
 def test_train_step_fuse_block_smoke():
     """Convergence smoke with fuse_block=True: the fused-block train step
     overfits one batch, and its first-step loss/grad-norm match the

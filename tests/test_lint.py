@@ -173,6 +173,79 @@ def test_mutation_foreign_collective_fires_collective_checker():
     assert "all_gather" in fs[0].message
 
 
+def test_mutation_scatter_budget_fires_both_ways():
+    # ISSUE 8: the scattered-layout budget (psum_scatters per interior
+    # layer, a single final psum). An interior layer that all-reduces
+    # instead of scattering fires BOTH messages: one psum over budget,
+    # one psum_scatter missing.
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    from repro.launch.mesh import make_compat_mesh
+
+    mesh = make_compat_mesh((1, 1), ("data", "model"))
+    x = jnp.zeros((4, 4))
+
+    def scatters(xl):
+        return jax.lax.psum_scatter(xl, "model", scatter_dimension=0,
+                                    tiled=True)
+
+    def psums(xl):  # the psum layout leaking into a scattered budget
+        return jax.lax.psum(xl, "model")
+
+    ok = compat_shard_map(scatters, mesh, in_specs=(P(),),
+                          out_specs=P("model"))
+    bad = compat_shard_map(psums, mesh, in_specs=(P(),), out_specs=P())
+    assert jaxpr_lint.check_collective_budget(
+        ok, (x,), psums=0, psum_scatters=1, target="ok") == []
+    fs = jaxpr_lint.check_collective_budget(
+        bad, (x,), psums=0, psum_scatters=1, target="mutant")
+    assert len(fs) == 2 and all(
+        f.checker == "collective-budget" for f in fs)
+    msgs = " | ".join(f.message for f in fs)
+    assert "traced 1 psum(s), want exactly 0" in msgs
+    assert "traced 0 psum_scatter(s), want exactly 1" in msgs
+
+
+def test_mutation_psum_layout_fails_scatter_budget(subproc):
+    # End-to-end mutation on the REAL serve path: hold the legacy psum
+    # layout to the scattered layout's budget — both messages fire
+    # (num_layers psums where 1 is allowed, zero interior scatters).
+    subproc("""
+    import sys
+    sys.path.insert(0, {src!r})
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import sharding as shd
+    from repro.core import fno as fno_mod
+    from repro.analysis import jaxpr_lint as jl
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True,
+                              tp_layout="psum")
+    params = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda: fno_mod.init_fno(jax.random.PRNGKey(0),
+                                                cfg)))
+    x = jnp.zeros((8, cfg.in_channels) + tuple(cfg.spatial))
+    ctx = shd.make_context(cfg, make_debug_mesh(4, 2), kind="serve")
+    def fwd(p, xx):
+        with shd.sharding_context(ctx):
+            return fno_mod.apply_fno(p, cfg, xx, path="pallas")
+    L = cfg.num_layers
+    fs = jl.check_collective_budget(fwd, (params, x), psums=1,
+                                    psum_scatters=L - 1, target="mutant")
+    assert len(fs) == 2, fs
+    msgs = " | ".join(f.message for f in fs)
+    assert f"traced {{L}} psum(s), want exactly 1" in msgs, msgs
+    assert f"traced 0 psum_scatter(s), want exactly {{L - 1}}" in msgs, msgs
+    print("psum-layout-vs-scattered-budget mutation OK")
+    """.format(src=os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")))
+
+
 # ---------------------------------------------------------------------------
 # AST-lint mutations (tmp files, scanned with the tmp dir as root)
 # ---------------------------------------------------------------------------
@@ -309,3 +382,26 @@ def test_launch_estimates_report_all_kernels():
     part = vmem.block_launch_estimates(get_config("fno2d", reduced=True),
                                        variant="partial")
     assert "core" in part and "block_fwd" not in part
+
+
+def test_ends_launch_estimate_and_feasibility():
+    # ISSUE 8: fuse_ends adds exactly one launch kind to the estimate set
+    # (the ends-fused forward — backward re-stages, no new kernels). The
+    # acca scratch [lift, bb, *spatial] dominates: reduced shapes fit,
+    # the full-size 3D grid does not, and opting in surfaces that as a
+    # vmem-budget error instead of a Mosaic failure mid-run.
+    from repro.configs.fno import with_fuse_ends
+
+    cfg = with_fuse_ends(get_config("fno2d", reduced=True))
+    est = vmem.block_launch_estimates(cfg)
+    assert "block_fwd_ends" in est
+    e = est["block_fwd_ends"]
+    assert 0 < e.total_bytes <= vmem.VMEM_BUDGET_BYTES
+    assert e.scratch_bytes > est["block_fwd"].scratch_bytes  # + acca
+    # without the flag the launch is absent (default sweeps unchanged)
+    assert "block_fwd_ends" not in vmem.block_launch_estimates(
+        get_config("fno2d", reduced=True))
+    fs = vmem.check_vmem(configs=[with_fuse_ends(get_config("fno3d"))],
+                         dtypes=("f32",), variants=("full",))
+    assert any(f.target.endswith("block_fwd_ends") for f in fs), fs
+    assert errors(fs)
