@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Chaos gate (ISSUE 9, docs/DESIGN.md §9): a scripted deterministic fault
+plan replayed through ``ResilientServer`` — CI fails unless the resilience
+contract holds EXACTLY:
+
+  * every accepted request is answered with a finite output (zero drops
+    through a kernel fault, a NaN injection, and a replica kill);
+  * degraded-request count == planned degradation faults (kernel + nan) —
+    no silent fallback, no spurious fallback;
+  * shed-request count == the admission overflow the script provokes;
+  * every degraded (XLA-fallback) answer matches the staged XLA oracle to
+    the tier-1 parity tolerance (2e-4), as do the healthy pallas answers;
+  * a corrupted checkpoint makes the hot reload ROLL BACK (old params keep
+    serving, bit-identical), and a subsequent valid checkpoint reloads.
+
+Pure CPU: the pallas path runs in interpret mode; tiny reduced config.
+
+Usage: PYTHONPATH=src python scripts/chaos_smoke.py
+"""
+import dataclasses
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PARITY_TOL = 2e-4  # the tier-1 pallas-vs-oracle tolerance
+
+
+def main() -> int:
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import Checkpointer
+    from repro.configs import get_config
+    from repro.core import fno as fno_mod
+    from repro.distributed import faults as flt
+    from repro.train import serve_runtime as srt
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    key = jax.random.PRNGKey(0)
+    params = fno_mod.init_fno(key, cfg)
+    params2 = fno_mod.init_fno(jax.random.PRNGKey(1), cfg)
+
+    plan = flt.standard_chaos_plan()
+    n_requests = 4
+    n_overflow = 2
+    planned_degradations = plan.count(kinds=("kernel", "nan"))
+    planned_kills = plan.count(kinds=("kill",))
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        ck = Checkpointer(ckdir)
+        rs = srt.ResilientServer(
+            cfg, params, replicas=2, max_batch=2,
+            queue_limit=n_requests, fault_plan=plan, checkpointer=ck,
+            seed=0, backoff_base_s=1e-3)
+
+        xs = [jax.random.normal(jax.random.fold_in(key, i),
+                                (2, cfg.in_channels) + tuple(cfg.spatial))
+              for i in range(n_requests)]
+        oracle = [np.asarray(fno_mod.apply_fno(params, cfg, x, path="xla"))
+                  for x in xs]
+
+        # -- the fault-plan replay ------------------------------------------
+        for x in xs:
+            rs.submit(x)
+        ys = rs.drain()
+
+        assert len(ys) == n_requests, (
+            f"dropped requests: {len(ys)}/{n_requests} answered")
+        for i, y in enumerate(ys):
+            assert np.isfinite(y).all(), f"request {i}: non-finite output"
+            err = float(np.max(np.abs(y - oracle[i])))
+            assert err <= PARITY_TOL, (
+                f"request {i}: |y - oracle| = {err:.2e} > {PARITY_TOL}")
+        s = rs.stats
+        assert s["degraded"] == planned_degradations, (
+            f"degraded={s['degraded']}, plan injected "
+            f"{planned_degradations} degradation faults — the counter and "
+            f"the plan must match exactly (no silent fallback)")
+        assert s["killed"] == planned_kills and s["failovers"] >= 1, (
+            f"killed={s['killed']} failovers={s['failovers']}: the replica "
+            f"kill must cost a failover, not an answer")
+        assert s["served"] == s["accepted"] == n_requests
+        assert rs.pool.states()["dead"] == planned_kills
+
+        # -- admission overflow: explicit shed, exact count -----------------
+        shed = 0
+        for i in range(n_requests + n_overflow):
+            try:
+                rs.submit(xs[i % n_requests])
+            except srt.RequestRejected:
+                shed += 1
+        assert shed == n_overflow, (
+            f"queue_limit={n_requests}: expected exactly {n_overflow} "
+            f"shed, got {shed}")
+        assert rs.stats["shed"] == n_overflow
+        ys2 = rs.drain()
+        assert len(ys2) == n_requests
+        assert all(np.isfinite(y).all() for y in ys2)
+
+        # -- corrupt checkpoint: reload rolls back, old params serve --------
+        ck.save(1, params2)
+        flt.corrupt_checkpoint(ckdir, 1)
+        before = rs(xs[0])
+        assert rs.reload() is False, "corrupt ckpt must roll back"
+        assert rs.stats["rollbacks"] == 1
+        after = rs(xs[0])
+        np.testing.assert_array_equal(before, after)
+
+        # -- valid checkpoint: canary passes, params swap -------------------
+        ck.save(2, params2)
+        assert rs.reload() is True, "valid ckpt must reload"
+        y_new = rs(xs[0])
+        want = np.asarray(fno_mod.apply_fno(params2, cfg, xs[0],
+                                            path="xla"))
+        assert float(np.max(np.abs(y_new - want))) <= PARITY_TOL
+
+        print(f"chaos smoke OK: {s['accepted']} accepted requests all "
+              f"finite under kernel+nan+kill faults "
+              f"(degraded={s['degraded']} == plan, failovers="
+              f"{s['failovers']}, shed={rs.stats['shed']} == overflow, "
+              f"reload rollback+swap verified, parity <= {PARITY_TOL})")
+        print(f"  final pool: {rs.pool.states()}  stats: {rs.stats}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,12 @@ python scripts/overlap_smoke.py
 # pipeline over the reduced shapes into a throwaway cache, then the
 # staleness lint over it. Pure python byte-model math — seconds, no jax.
 python scripts/autotune.py --smoke
+# Chaos smoke (ISSUE 9): the deterministic fault plan (kernel fault, NaN
+# injection, replica kill, corrupt checkpoint) replayed through the
+# resilient serving runtime — every accepted request answered finite,
+# degraded/shed counts exactly match the plan, XLA-fallback parity
+# <= 2e-4, corrupt-checkpoint reload rolls back (docs/DESIGN.md §9).
+python scripts/chaos_smoke.py
 # Contract lint (ISSUE 6/7): AST rules, config-registry audit, static
 # VMEM estimates (tuned plans, error severity), tuned-cache staleness,
 # and the jaxpr trace lints (pallas counts / cast ownership / collective

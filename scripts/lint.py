@@ -83,7 +83,8 @@ def main() -> int:
                 ("block matrix", jaxpr_lint.lint_block_matrix),
                 ("fused models", jaxpr_lint.lint_model),
                 ("sharded blocks", jaxpr_lint.lint_sharded_blocks),
-                ("serve steps", jaxpr_lint.lint_serve)):
+                ("serve steps", jaxpr_lint.lint_serve),
+                ("resilient serve", jaxpr_lint.lint_resilient_serve)):
             fs = run()
             print(f"trace lints [{name}]: {len(errors(fs))} error(s)")
             findings += fs

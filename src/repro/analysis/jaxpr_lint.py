@@ -375,6 +375,51 @@ def lint_serve(arch: str = "fno2d",
     return findings
 
 
+def lint_resilient_serve(arch: str = "fno2d",
+                         dtypes: Sequence[str] = DTYPES) -> List[Finding]:
+    """The resilience contract at trace level (DESIGN.md §9): the
+    ``ResilientServer`` production step stays EXACTLY the fused serving
+    step — num_layers pallas_calls, no extra collectives — while the
+    degraded (XLA-oracle) step contains ZERO pallas_calls and zero
+    explicit collectives. The fallback lives in its own jit entry; if it
+    ever leaked into the hot trace (or started launching kernels itself)
+    the degradation ladder would be serving the very path it is supposed
+    to be a refuge from."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.configs.fno import with_precision
+    from repro.core import fno as fno_mod
+    from repro.train import serve_runtime as srt
+
+    findings: List[Finding] = []
+    for dtype in dtypes:
+        cfg = dataclasses.replace(
+            with_precision(get_config(arch, reduced=True), dtype),
+            path="pallas", fuse_block=True)
+        params = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            jax.eval_shape(lambda: fno_mod.init_fno(
+                jax.random.PRNGKey(0), cfg)))
+        rs = srt.ResilientServer(cfg, params, replicas=1, max_batch=2)
+        xb = jnp.zeros((rs.primary.buckets[0], cfg.in_channels)
+                       + tuple(cfg.spatial), jnp.float32)
+        args = (params, {"x": xb})
+        tgt = f"ResilientServer {arch}/{dtype}"
+        findings += check_pallas_count(
+            rs.primary.step_fn, args, cfg.num_layers,
+            target=f"{tgt} production step")
+        findings += check_pallas_count(
+            rs.fallback.step_fn, args, 0, target=f"{tgt} degraded step")
+        findings += check_collective_budget(
+            rs.fallback.step_fn, args, psums=0,
+            target=f"{tgt} degraded step")
+        findings += check_cast_ownership(
+            rs.fallback.step_fn, args, cfg.precision,
+            target=f"{tgt} degraded step")
+    return findings
+
+
 # ---------------------------------------------------------------------------
 # thin-wrapper entry points for the existing CI guards
 # ---------------------------------------------------------------------------

@@ -38,6 +38,14 @@ class Checkpointer:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self.last_error: Optional[Exception] = None
+        # Crash-leftover sweep: a save killed mid-write leaves its
+        # .tmp_step_* dir behind (the atomic rename never happened).
+        # Stale tmp dirs are garbage by construction — no reader ever
+        # sees them — so reclaim the disk on startup.
+        for name in os.listdir(directory):
+            if name.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
@@ -100,6 +108,33 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def verify(self, step: int) -> bool:
+        """True iff step's manifest parses and every array matches its
+        sha256 — the integrity predicate behind ``latest_valid_step``."""
+        d = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(d, "arrays.npz"))
+            checksums = manifest["checksums"]
+            if set(data.files) != set(checksums):
+                return False
+            return all(
+                hashlib.sha256(data[k].tobytes()).hexdigest() == checksums[k]
+                for k in data.files)
+        except Exception:  # unreadable/corrupt step is just invalid
+            return False
+
+    def latest_valid_step(self) -> Optional[int]:
+        """Newest step that passes ``verify`` — the restore entry point
+        for callers that must survive a corrupt/truncated checkpoint
+        (trainer restarts, the serving runtime's hot reload): corrupt
+        steps are skipped, not fatal."""
+        for step in reversed(self.steps()):
+            if self.verify(step):
+                return step
+        return None
 
     def restore(self, step: int, target: Any,
                 shardings: Optional[Any] = None) -> Any:

@@ -23,6 +23,7 @@ class PrefetchPipeline:
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self.skipped = 0
+        self._failed_at: Optional[int] = None  # producer death is terminal
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -39,15 +40,27 @@ class PrefetchPipeline:
 
     def get(self, timeout: Optional[float] = None):
         """Next (index, batch). On timeout, counts a skip and retries —
-        the loop keeps moving past a straggling producer."""
+        the loop keeps moving past a straggling producer.
+
+        ``timeout`` is passed through verbatim: None blocks, an explicit
+        0 polls (a zero-second timeout is a timeout, not "no timeout").
+        Producer death is TERMINAL: once the failure sentinel has been
+        consumed, every subsequent ``get`` raises immediately instead of
+        spinning on an empty queue counting skips forever."""
         while True:
+            if self._failed_at is not None:
+                raise RuntimeError(
+                    f"data producer failed at index {self._failed_at}")
             try:
-                idx, batch = self._q.get(
-                    timeout=timeout if timeout else None)
+                idx, batch = self._q.get(timeout=timeout)
             except queue.Empty:
+                if not self._thread.is_alive() and self._q.empty():
+                    raise RuntimeError(
+                        "data producer is dead and the queue is drained")
                 self.skipped += 1
                 continue
             if batch is None:
+                self._failed_at = idx
                 raise RuntimeError(f"data producer failed at index {idx}")
             return idx, batch
 

@@ -17,27 +17,44 @@ import numpy as np
 
 
 class Watchdog:
-    """Fires `on_timeout` if `beat()` isn't called within `timeout_s`."""
+    """Fires `on_timeout` if `beat()` isn't called within `timeout_s`.
+
+    One-shot per beat: firing disarms the watchdog until the next
+    ``beat()``, and the elapsed-check + disarm happen under the same lock
+    ``beat()`` takes — so a heartbeat racing the timeout check can either
+    land before it (fresh ``_last``, no fire) or after it (re-arm for the
+    NEXT interval), but the watchdog can never double-fire for one stall
+    and never fires for a stall a beat already ended.
+    """
 
     def __init__(self, timeout_s: float,
                  on_timeout: Callable[[], None]):
         self.timeout_s = timeout_s
         self.on_timeout = on_timeout
+        self._lock = threading.Lock()
         self._last = time.monotonic()
+        self._armed = True
         self._stop = threading.Event()
         self.fired = 0
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def beat(self) -> None:
-        self._last = time.monotonic()
+        with self._lock:
+            self._last = time.monotonic()
+            self._armed = True
 
     def _run(self) -> None:
-        while not self._stop.is_set():
-            time.sleep(self.timeout_s / 4)
-            if time.monotonic() - self._last > self.timeout_s:
-                self.fired += 1
-                self._last = time.monotonic()
+        while not self._stop.wait(self.timeout_s / 4):
+            fire = False
+            with self._lock:
+                if self._armed and \
+                        time.monotonic() - self._last > self.timeout_s:
+                    self.fired += 1
+                    self._armed = False  # one shot until the next beat
+                    self._last = time.monotonic()
+                    fire = True
+            if fire:
                 self.on_timeout()
 
     def stop(self) -> None:
@@ -57,6 +74,13 @@ class StragglerMonitor:
         self.decay = decay
         self.ema: Optional[float] = None
         self.flagged: List[int] = []
+
+    def reset(self) -> None:
+        """Forget the EMA and the flag history — post-restart reuse: a
+        restarted run's first steps (compile, cache warm) must not be
+        judged against the pre-restart steady-state EMA."""
+        self.ema = None
+        self.flagged = []
 
     def record(self, step: int, dt: float) -> bool:
         is_straggler = self.ema is not None and dt > self.ratio * self.ema

@@ -44,6 +44,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--no-fuse-block", action="store_true",
                     help="serve the staged (unfused-block) pallas path")
+    ap.add_argument("--chaos", action="store_true",
+                    help="replay the standard fault plan (kernel fault, "
+                         "NaN injection, replica kill, corrupt checkpoint) "
+                         "through the resilient runtime and print pool/"
+                         "degradation stats (docs/DESIGN.md §9)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replica-pool size for --chaos")
     ap.add_argument("--dp", type=int, default=0,
                     help="data-parallel shards (0 = devices // tp)")
     ap.add_argument("--tp", type=int, default=0,
@@ -82,6 +89,8 @@ def run(args) -> dict:
 
     key = jax.random.PRNGKey(0)
     params = fno_mod.init_fno(key, cfg)
+    if args.chaos:
+        return _run_chaos(args, cfg, ctx, params, key, dp, tp)
     server = sfs.FNOServer(cfg, params, ctx=ctx, path=args.path,
                            variant=args.variant, max_batch=args.max_batch)
 
@@ -139,6 +148,65 @@ def run(args) -> dict:
           f"{dt*1e3:.0f} ms ({out['samples_per_s']:.1f} samples/s, "
           f"{server.stats['padded']} padded), all outputs finite")
     return out
+
+
+def _run_chaos(args, cfg, ctx, params, key, dp, tp) -> dict:
+    """--chaos: replay the standard deterministic fault plan through the
+    resilient runtime (ResilientServer), asserting every accepted request
+    is answered finite, then print the pool/degradation stats next to the
+    collective plan. scripts/chaos_smoke.py is the stricter CI gate; this
+    mode is the operator-facing replay."""
+    import tempfile
+
+    from repro.checkpoint import Checkpointer
+    from repro.distributed import faults as flt
+    from repro.train import serve_runtime as srt
+
+    plan = flt.standard_chaos_plan()
+    with tempfile.TemporaryDirectory() as ckdir:
+        ck = Checkpointer(ckdir)
+        rs = srt.ResilientServer(
+            cfg, params, replicas=args.replicas, ctx=ctx,
+            variant=args.variant, max_batch=args.max_batch,
+            queue_limit=max(args.requests, 1), fault_plan=plan,
+            checkpointer=ck, seed=0, backoff_base_s=1e-3)
+        rng = np.random.default_rng(0)
+        sizes = rng.integers(1, args.max_batch + 1, size=args.requests)
+        t0 = time.time()
+        ys = []
+        for i, n in enumerate(sizes):
+            x = jax.random.normal(
+                jax.random.fold_in(key, i),
+                (int(n), cfg.in_channels) + tuple(cfg.spatial))
+            ys.append(rs(x))
+        dt = time.time() - t0
+        for y in ys:
+            assert np.isfinite(y).all(), "non-finite chaos serve output"
+        # The corrupt-checkpoint leg: a corrupted-on-disk step must make
+        # the hot reload roll back (old params keep serving).
+        ck.save(1, params)
+        flt.corrupt_checkpoint(ckdir, 1)
+        assert rs.reload() is False, "reload of a corrupt ckpt must roll back"
+
+        report = rs.pool_report()
+        plan_srv = rs.primary.collective_plan()
+        samples = int(sizes.sum())
+        print(f"serve_fno --chaos arch={args.arch} mesh=dp{dp}xtp{tp} "
+              f"replicas={args.replicas} requests={args.requests}")
+        print(f"  collective plan: interior={plan_srv['interior_collective']} "
+              f"final={plan_srv['final_collective']} "
+              f"layout={plan_srv['tp_layout']} overlap={plan_srv['tp_overlap']} "
+              f"wire={plan_srv['wire_bytes_per_fwd'] / 2**10:.1f}KiB/fwd")
+        print(f"  pool: {report['replicas']}")
+        print(f"  stats: accepted={report['accepted']} "
+              f"served={report['served']} degraded={report['degraded']} "
+              f"shed={report['shed']} failovers={report['failovers']} "
+              f"quarantined={report['quarantined']} "
+              f"reinstated={report['reinstated']} "
+              f"rollbacks={report['rollbacks']}")
+        print(f"  served {samples} samples in {dt*1e3:.0f} ms under the "
+              f"fault plan; all outputs finite")
+        return {"arch": args.arch, "dp": dp, "tp": tp, **report}
 
 
 def main() -> None:

@@ -139,6 +139,15 @@ class FNOServer:
             "wire_bytes_interior_layer": wire["interior_per_layer"],
         }
 
+    def step_with(self, params, x: jax.Array) -> jax.Array:
+        """One bucketed step with EXPLICIT params (instead of
+        ``self.params``): the canary-validation hook — the resilient
+        runtime (``train/serve_runtime.py``) probes candidate reload
+        params through the same jit cache before swapping them in."""
+        b = pick_bucket(x.shape[0], self.buckets)
+        xp, m = pad_to_bucket(x, b)
+        return self._step(params, {"x": xp})[:m]
+
     def __call__(self, x: jax.Array) -> jax.Array:
         """Serve one request batch x [n, C_in, *spatial] -> [n, C_out, …].
 

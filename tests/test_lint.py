@@ -207,6 +207,41 @@ def test_mutation_scatter_budget_fires_both_ways():
     assert "traced 0 psum_scatter(s), want exactly 1" in msgs
 
 
+def test_resilient_serve_lint_clean_and_mutation():
+    # ISSUE 9: the resilience trace contract. Clean: the ResilientServer
+    # production step traces exactly num_layers pallas_calls while the
+    # degraded XLA step traces ZERO. Mutation: a "fallback" that launches
+    # the pallas path itself (defeating the whole point of degradation)
+    # makes the degraded-step checker fire.
+    import dataclasses
+
+    from repro.core import fno as fno_mod
+    from repro.train import serve_runtime as srt
+
+    fs = jaxpr_lint.lint_resilient_serve(dtypes=("f32",))
+    assert fs == [], fs
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    params = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda: fno_mod.init_fno(jax.random.PRNGKey(0),
+                                                cfg)))
+    rs = srt.ResilientServer(cfg, params, replicas=1, max_batch=2)
+    xb = jnp.zeros((rs.primary.buckets[0], cfg.in_channels)
+                   + tuple(cfg.spatial), jnp.float32)
+    args = (params, {"x": xb})
+
+    def kernel_launching_fallback(p, batch):  # the mutant degraded step
+        return rs.primary.step_fn(p, batch)
+
+    fs = jaxpr_lint.check_pallas_count(kernel_launching_fallback, args, 0,
+                                       target="mutant fallback")
+    assert len(fs) == 1 and fs[0].checker == "pallas-count"
+    assert (f"traced {cfg.num_layers} pallas_calls, want exactly 0"
+            in fs[0].message)
+
+
 def test_mutation_psum_layout_fails_scatter_budget(subproc):
     # End-to-end mutation on the REAL serve path: hold the legacy psum
     # layout to the scattered layout's budget — both messages fire
