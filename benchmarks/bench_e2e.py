@@ -307,6 +307,74 @@ def run_serve(quick: bool = False):
         f"speedup={lt['psum'] / lt['scatter']:.2f}x "
         f"interior_bytes_ratio={ratio:.3f}x grid=dp{dp}xtp{tp}")
 
+    run_replay(quick)
+
+
+def run_replay(quick: bool = False):
+    """Traffic-replay serving rows (ISSUE 10): the async continuous-
+    batching tier (``train/serve_queue``) under a seeded Poisson-ish
+    arrival schedule — p50/p99 enqueue→complete latency and queue-depth
+    rows next to the throughput rows. The schedule is a pure function of
+    its seed (no wall-clock randomness); the event loop runs on a virtual
+    clock whose per-bucket service model is CALIBRATED from this host's
+    measured fused serve step, and the arrival rate is set to ~1.2x the
+    calibrated capacity so the queue actually builds depth on any
+    machine. Admission/coalescing decisions are therefore deterministic
+    given the calibration; absolute latencies are host latencies, same
+    caveat as every wall-time row. Row schema: benchmarks/README.md."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import fno as fno_mod
+    from repro.train import serve_fno_step as sfs
+    from repro.train import serve_queue as sq
+
+    print("# bench_e2e replay rows: name,us_per_call,derived")
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    params = fno_mod.init_fno(jax.random.PRNGKey(0), cfg)
+    max_batch = 4 if quick else 8
+    server = sfs.FNOServer(cfg, params, max_batch=max_batch)
+    steps = 2  # every request asks a 2-step device-resident rollout
+    base = {}
+    for b in server.buckets:
+        xb = jnp.zeros((b, cfg.in_channels) + tuple(cfg.spatial),
+                       jnp.float32)
+        base[b] = time_fn(
+            lambda xb=xb: server(xb, rollout_steps=steps), iters=3) * 1e-6
+    service_model = lambda bucket, k: base[bucket]  # noqa: E731
+
+    top = server.buckets[-1]
+    mean_n = (1 + max_batch) / 2
+    rate_hz = 1.2 * (top / base[top]) / mean_n  # ~1.2x calibrated capacity
+    deadline_s = 20 * base[top]
+    requests = 24 if quick else 64
+    cbs = sq.ContinuousBatchingServer(
+        server, queue_limit=2 * max_batch, coalesce_s=1.0 / rate_hz,
+        clock=sq.VirtualClock(), service_model=service_model)
+    sched = sq.poisson_schedule(7, requests, rate_hz=rate_hz,
+                                max_n=max_batch, rollout_steps=steps,
+                                deadline_s=deadline_s)
+    rng = np.random.default_rng(7)
+    xs = [jnp.asarray(rng.normal(
+        size=(a.n, cfg.in_channels) + tuple(cfg.spatial)), jnp.float32)
+        for a in sched]
+    rep = cbs.replay(sched, lambda a, i: xs[i])
+    s, lat, qd = rep["stats"], rep["latency"], rep["queue_depth"]
+    row("serve2d_replay_lat", lat["p50"] * 1e6,
+        f"p50_ms={lat['p50']*1e3:.2f} p99_ms={lat['p99']*1e3:.2f} "
+        f"deadline_ms={deadline_s*1e3:.2f} completed={s['completed']} "
+        f"rollout_steps={steps}")
+    row("serve2d_replay_queue", 0.0,
+        f"qdepth_p50={qd['p50']:.1f} qdepth_p99={qd['p99']:.1f} "
+        f"qdepth_max={qd['max']:.0f} batches={s['batches']} "
+        f"coalesced={s['coalesced']} shed={s['shed']} "
+        f"deadline_exceeded={s['deadline_exceeded']}")
+    tput = rep["served_samples"] / max(rep["makespan_s"], 1e-9)
+    row("serve2d_replay_tput", 0.0,
+        f"samples_per_s={tput:.1f} makespan_ms={rep['makespan_s']*1e3:.0f} "
+        f"offered={s['offered']} accepted={s['accepted']}")
+
 
 if __name__ == "__main__":
     run()

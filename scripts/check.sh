@@ -23,6 +23,12 @@ python scripts/overlap_smoke.py
 # pipeline over the reduced shapes into a throwaway cache, then the
 # staleness lint over it. Pure python byte-model math — seconds, no jax.
 python scripts/autotune.py --smoke
+# Continuous-batching replay smoke (ISSUE 10): a seeded traffic replay
+# through the async coalescing queue on a virtual clock — exact shed/
+# coalesce/deadline counts, the no-late-serving deadline contract, replay
+# determinism, and the rollout trace contract (K-step device-resident
+# rollout == num_layers pallas_calls for K in {1,4} — docs/DESIGN.md §10).
+python scripts/serve_replay_smoke.py
 # Chaos smoke (ISSUE 9): the deterministic fault plan (kernel fault, NaN
 # injection, replica kill, corrupt checkpoint) replayed through the
 # resilient serving runtime — every accepted request answered finite,

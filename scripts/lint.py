@@ -84,6 +84,7 @@ def main() -> int:
                 ("fused models", jaxpr_lint.lint_model),
                 ("sharded blocks", jaxpr_lint.lint_sharded_blocks),
                 ("serve steps", jaxpr_lint.lint_serve),
+                ("rollout serve", jaxpr_lint.lint_rollout),
                 ("resilient serve", jaxpr_lint.lint_resilient_serve)):
             fs = run()
             print(f"trace lints [{name}]: {len(errors(fs))} error(s)")

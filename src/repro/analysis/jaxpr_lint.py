@@ -375,6 +375,49 @@ def lint_serve(arch: str = "fno2d",
     return findings
 
 
+def lint_rollout(archs: Sequence[str] = ("fno1d", "fno2d", "fno3d"),
+                 dtypes: Sequence[str] = DTYPES,
+                 ks: Sequence[int] = (1, 4)) -> List[Finding]:
+    """The rollout trace contract (DESIGN.md §10): a K-step device-
+    resident rollout (``FNOServer.rollout_step_fn`` — one ``lax.scan``
+    whose body is the fused forward) traces EXACTLY ``num_layers``
+    pallas_calls regardless of K, because the scan body traces once. An
+    unrolled per-step loop would trace K × num_layers — K kernel-launch
+    sets and K HBM round-trips of the carry — which is precisely the
+    staged dispatch the rollout tier exists to eliminate. Casts stay
+    policy-owned: the single carry cast at the top is the policy's own
+    input cast, and every scan iteration reuses the carry dtype."""
+    import dataclasses
+    import functools
+
+    from repro.configs import get_config
+    from repro.configs.fno import with_precision
+    from repro.core import fno as fno_mod
+    from repro.train import serve_fno_step as sfs
+
+    findings: List[Finding] = []
+    for arch, dtype in itertools.product(archs, dtypes):
+        cfg = dataclasses.replace(
+            with_precision(get_config(arch, reduced=True), dtype),
+            path="pallas", fuse_block=True)
+        params = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            jax.eval_shape(lambda: fno_mod.init_fno(
+                jax.random.PRNGKey(0), cfg)))
+        server = sfs.FNOServer(cfg, params, max_batch=2)
+        xb = jnp.zeros((server.buckets[0], cfg.in_channels)
+                       + tuple(cfg.spatial), jnp.float32)
+        args = (params, {"x": xb})
+        for k in ks:
+            target = f"FNOServer.rollout_step_fn {arch}/{dtype} K={k}"
+            fn = functools.partial(server.rollout_step_fn, steps=k)
+            findings += check_pallas_count(fn, args, cfg.num_layers,
+                                           target=target)
+            findings += check_cast_ownership(fn, args, cfg.precision,
+                                             target=target)
+    return findings
+
+
 def lint_resilient_serve(arch: str = "fno2d",
                          dtypes: Sequence[str] = DTYPES) -> List[Finding]:
     """The resilience contract at trace level (DESIGN.md §9): the

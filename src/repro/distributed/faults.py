@@ -158,3 +158,22 @@ def standard_chaos_plan() -> FaultPlan:
         Fault("kill", at=2),
         Fault("corrupt_ckpt", at=3),
     ])
+
+
+def canned_chaos_plans() -> Dict[str, "FaultPlan"]:
+    """Every canned serving chaos plan, by name — the registry the
+    conservation tests sweep (``tests/test_resilience.py``): whatever the
+    plan injects, ``ResilientServer.STAT_KEYS`` must keep summing to the
+    requests offered, and degraded/shed/killed must exactly match the
+    plan. Plans are built fresh per call (``FaultPlan`` is stateful —
+    fire-once)."""
+    return {
+        "quiet": FaultPlan([]),
+        "standard": standard_chaos_plan(),
+        "nan_burst": FaultPlan([Fault("nan", at=0), Fault("nan", at=1),
+                                Fault("nan", at=2)]),
+        "kill_failover": FaultPlan([Fault("kill", at=0, replica=0),
+                                    Fault("kernel", at=2)]),
+        "delay": FaultPlan([Fault("delay", at=0, delay_s=0.02),
+                            Fault("delay", at=1, delay_s=0.02)]),
+    }

@@ -44,6 +44,22 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--no-fuse-block", action="store_true",
                     help="serve the staged (unfused-block) pallas path")
+    ap.add_argument("--rollout-steps", type=int, default=1,
+                    help="serve K-step autoregressive rollouts: step t+1 "
+                         "runs on step t's output inside ONE jitted "
+                         "lax.scan (device-resident — the carry never "
+                         "leaves HBM; docs/DESIGN.md §10)")
+    ap.add_argument("--replay", action="store_true",
+                    help="traffic replay through the async continuous-"
+                         "batching tier: a seeded Poisson-ish arrival "
+                         "schedule (no wall-clock randomness) coalesced "
+                         "into kernel-block buckets on a virtual clock, "
+                         "printing p50/p99 latency and queue-depth next "
+                         "to throughput (docs/DESIGN.md §10)")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="--replay arrival rate in requests/s")
+    ap.add_argument("--deadline-ms", type=float, default=100.0,
+                    help="--replay per-request deadline (milliseconds)")
     ap.add_argument("--chaos", action="store_true",
                     help="replay the standard fault plan (kernel fault, "
                          "NaN injection, replica kill, corrupt checkpoint) "
@@ -91,6 +107,8 @@ def run(args) -> dict:
     params = fno_mod.init_fno(key, cfg)
     if args.chaos:
         return _run_chaos(args, cfg, ctx, params, key, dp, tp)
+    if args.replay:
+        return _run_replay(args, cfg, ctx, params, key, dp, tp)
     server = sfs.FNOServer(cfg, params, ctx=ctx, path=args.path,
                            variant=args.variant, max_batch=args.max_batch)
 
@@ -99,11 +117,24 @@ def run(args) -> dict:
     # shard_map dispatch. Only the full-fusion variant makes this promise —
     # the paper-faithful partial variant legitimately runs a multi-kernel
     # spectral pipeline per layer. Checked through the contract-linter
-    # framework (the same checker scripts/lint.py --trace sweeps).
+    # framework (the same checker scripts/lint.py --trace sweeps). A
+    # K-step rollout makes the SAME promise for any K (the scan body
+    # traces once — docs/DESIGN.md §10).
     if fuse and args.variant == "full":
+        import functools
+
         from repro.analysis import format_findings
-        from repro.analysis.jaxpr_lint import serve_step_contract
+        from repro.analysis.jaxpr_lint import (check_pallas_count,
+                                               serve_step_contract)
         findings = serve_step_contract(server, cfg)
+        if args.rollout_steps > 1:
+            xb = jnp.zeros((server.buckets[0], cfg.in_channels)
+                           + tuple(cfg.spatial), jnp.float32)
+            findings += check_pallas_count(
+                functools.partial(server.rollout_step_fn,
+                                  steps=args.rollout_steps),
+                (params, {"x": xb}), cfg.num_layers,
+                target=f"{cfg.name} rollout K={args.rollout_steps}")
         assert not findings, format_findings(findings)
 
     rng = np.random.default_rng(0)
@@ -111,7 +142,8 @@ def run(args) -> dict:
     # Warm the jit cache (one compile per bucket) outside the timed loop.
     for b in server.buckets:
         jax.block_until_ready(server(jnp.zeros(
-            (b, cfg.in_channels) + tuple(cfg.spatial), jnp.float32)))
+            (b, cfg.in_channels) + tuple(cfg.spatial), jnp.float32),
+            rollout_steps=args.rollout_steps))
 
     # Pre-build the request batches and validate outputs after the clock
     # stops, so samples_per_s measures the serve steps — not input
@@ -121,7 +153,7 @@ def run(args) -> dict:
             for i, n in enumerate(sizes)]
     jax.block_until_ready(reqs)
     t0 = time.time()
-    ys = [server(x) for x in reqs]
+    ys = [server(x, rollout_steps=args.rollout_steps) for x in reqs]
     jax.block_until_ready(ys)
     dt = time.time() - t0
     for y in ys:
@@ -132,6 +164,7 @@ def run(args) -> dict:
     out = {
         "arch": args.arch, "path": args.path, "fuse_block": fuse,
         "dp": dp, "tp": tp, "buckets": list(server.buckets),
+        "rollout_steps": args.rollout_steps,
         "requests": args.requests, "samples": samples,
         "padded": server.stats["padded"],
         "samples_per_s": samples / max(dt, 1e-9),
@@ -144,10 +177,78 @@ def run(args) -> dict:
           f"final={plan['final_collective']} "
           f"layout={plan['tp_layout']} overlap={plan['tp_overlap']} "
           f"wire={plan['wire_bytes_per_fwd'] / 2**10:.1f}KiB/fwd")
-    print(f"  served {args.requests} requests / {samples} samples in "
+    print(f"  served {args.requests} requests / {samples} samples "
+          f"(rollout K={args.rollout_steps}) in "
           f"{dt*1e3:.0f} ms ({out['samples_per_s']:.1f} samples/s, "
           f"{server.stats['padded']} padded), all outputs finite")
     return out
+
+
+def _run_replay(args, cfg, ctx, params, key, dp, tp) -> dict:
+    """--replay: the async continuous-batching tier under a seeded
+    Poisson-ish traffic replay (docs/DESIGN.md §10). The arrival schedule
+    is a pure function of the seed; the event loop runs on a virtual
+    clock with a per-bucket service model CALIBRATED from this host's
+    measured step times, so the p50/p99 rows reflect the machine while
+    the admission/coalescing decisions stay deterministic given the
+    calibration. scripts/serve_replay_smoke.py is the stricter CI gate
+    (fixed synthetic service model → machine-independent exact counts)."""
+    from repro.train import serve_queue as sq
+    from repro.train import serve_runtime as srt
+
+    rs = srt.ResilientServer(cfg, params, replicas=args.replicas, ctx=ctx,
+                             variant=args.variant,
+                             max_batch=args.max_batch,
+                             queue_limit=max(args.requests, 1), seed=0)
+    buckets = rs.primary.buckets
+    steps = args.rollout_steps
+    # Calibrate the virtual-time service model: median of 3 measured
+    # calls per (bucket, steps) after a warmup compile.
+    base = {}
+    for b in buckets:
+        xb = jnp.zeros((b, cfg.in_channels) + tuple(cfg.spatial),
+                       jnp.float32)
+        jax.block_until_ready(rs.primary(xb, rollout_steps=steps))
+        ts = []
+        for _ in range(3):
+            t0 = time.time()
+            jax.block_until_ready(rs.primary(xb, rollout_steps=steps))
+            ts.append(time.time() - t0)
+        base[b] = float(np.median(ts))
+    service_model = lambda bucket, k: base[bucket]  # noqa: E731
+
+    cbs = sq.ContinuousBatchingServer(
+        rs, queue_limit=args.max_batch * 2, coalesce_s=2.0 / args.rate,
+        clock=sq.VirtualClock(), service_model=service_model)
+    sched = sq.poisson_schedule(
+        0, args.requests, rate_hz=args.rate, max_n=args.max_batch,
+        rollout_steps=steps, deadline_s=args.deadline_ms * 1e-3)
+
+    def input_fn(a, i):
+        return np.asarray(jax.random.normal(
+            jax.random.fold_in(key, i),
+            (a.n, cfg.in_channels) + tuple(cfg.spatial)))
+
+    rep = cbs.replay(sched, input_fn)
+    for r in cbs.requests.values():
+        if r.status == "done":
+            assert np.isfinite(np.asarray(r.y)).all(), \
+                "non-finite replay output"
+    s, lat, qd = rep["stats"], rep["latency"], rep["queue_depth"]
+    print(f"serve_fno --replay arch={args.arch} mesh=dp{dp}xtp{tp} "
+          f"rate={args.rate:.0f}req/s deadline={args.deadline_ms:.0f}ms "
+          f"rollout K={steps} buckets={list(buckets)}")
+    print(f"  admission: offered={s['offered']} accepted={s['accepted']} "
+          f"shed={s['shed']} deadline_exceeded={s['deadline_exceeded']} "
+          f"completed={s['completed']}")
+    print(f"  batching: batches={s['batches']} coalesced={s['coalesced']} "
+          f"queue_depth p50={qd['p50']:.1f} p99={qd['p99']:.1f} "
+          f"max={qd['max']:.0f}")
+    print(f"  latency: p50={lat['p50']*1e3:.2f}ms p99={lat['p99']*1e3:.2f}ms "
+          f"mean={lat['mean']*1e3:.2f}ms over {lat['count']} completed "
+          f"({rep['served_samples']} samples, "
+          f"makespan {rep['makespan_s']*1e3:.0f}ms virtual)")
+    return {"arch": args.arch, "dp": dp, "tp": tp, **rep}
 
 
 def _run_chaos(args, cfg, ctx, params, key, dp, tp) -> dict:

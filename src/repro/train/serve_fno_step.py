@@ -1,14 +1,21 @@
-"""Batched FNO serving: the forward step, request bucketing, and a
-jit-cached server for the fused pallas path (docs/DESIGN.md §6).
+"""Batched FNO serving: the forward step, the device-resident rollout
+step, request bucketing, and a jit-cached server for the fused pallas
+path (docs/DESIGN.md §6, §10).
 
-FNO inference is a pure batch-throughput workload — one forward per request
-batch, no KV cache, no autoregression — so serving reduces to (1) batching
-requests, (2) padding each batch to a BUCKET size so the jit cache stays
-finite and the fused kernel's grid never re-specializes, and (3) running
-the bucketed forward on a DP×TP mesh. Buckets are multiples of the fused
-engine's tuned batch block (``repro.tuning.resolve_block_plan`` — the
-autotuned cache with ``ops._BLOCK_DEFAULTS`` as fallback) times the DP
+FNO inference has no KV cache, so single-step serving reduces to (1)
+batching requests, (2) padding each batch to a BUCKET size so the jit
+cache stays finite and the fused kernel's grid never re-specializes, and
+(3) running the bucketed forward on a DP×TP mesh. Buckets are multiples
+of the fused engine's tuned batch block (``repro.tuning.serve_quantum``,
+which validates the ladder against the autotuned cache) times the DP
 shard count, so neither the kernel nor the mesh ever sees a ragged batch.
+
+The production workload IS autoregressive, though: a PDE rollout feeds
+step t's prediction back as step t+1's state. ``make_fno_rollout_step``
+keeps the whole K-step trajectory device-resident inside one jitted
+``lax.scan`` — the scan body traces once, so the trace stays exactly
+``num_layers`` pallas_calls regardless of rollout depth (docs/DESIGN.md
+§10; pinned by ``analysis.jaxpr_lint.lint_rollout``).
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ import jax.numpy as jnp
 from repro.configs.base import FNOConfig
 from repro.core import fno as fno_mod
 from repro.distributed import sharding as shd
-from repro.tuning import resolve_block_plan
+from repro.tuning import resolve_block_plan, serve_quantum
 
 
 def make_fno_serve_step(cfg: FNOConfig, *, path: Optional[str] = None,
@@ -35,6 +42,53 @@ def make_fno_serve_step(cfg: FNOConfig, *, path: Optional[str] = None,
         return fno_mod.apply_fno(params, cfg, batch["x"],
                                  path=path or cfg.path, variant=variant)
     return fno_serve_step
+
+
+def make_fno_rollout_step(cfg: FNOConfig, *, path: Optional[str] = None,
+                          variant: str = "full"):
+    """rollout(params, batch{"x": [B,C_in,*spatial]}, steps=K) -> y_K.
+
+    Device-resident autoregressive rollout: step t+1 consumes step t's
+    output inside ONE jitted ``lax.scan`` — the carry never leaves HBM
+    between steps, so the fused kernels' traffic win compounds over the
+    whole trajectory instead of being paid back to HBM every step.
+
+    Channel feedback: the model maps ``in_channels -> out_channels``.
+    When they match the carry is simply the output; when the input has
+    extra conditioning channels (fno2d serves ``(a, x, y) -> u``) the
+    first ``out_channels`` carry channels are replaced by the prediction
+    and the trailing ``in_channels - out_channels`` channels (coordinate
+    grids / static conditioning) persist across steps. Requires
+    ``out_channels <= in_channels``.
+
+    Trace contract: the scan body traces ONCE, so a K-step rollout on the
+    fused pallas path contains exactly ``num_layers`` pallas_calls for
+    ANY K (pinned by ``analysis.jaxpr_lint.lint_rollout``). ``steps``
+    must be static under jit (``static_argnames=("steps",)``).
+    """
+    if cfg.out_channels > cfg.in_channels:
+        raise ValueError(
+            f"rollout needs out_channels <= in_channels to feed step t's "
+            f"output back as step t+1's state, got {cfg.out_channels} > "
+            f"{cfg.in_channels} for {cfg.name}")
+    keep = cfg.in_channels - cfg.out_channels
+
+    def fno_rollout_step(params, batch: Dict[str, jax.Array], *,
+                         steps: int) -> jax.Array:
+        # Cast ONCE so the scan carry dtype is invariant (apply_fno's own
+        # input cast becomes the identity on every step).
+        x0 = batch["x"].astype(jnp.dtype(cfg.precision.compute_dtype))
+
+        def body(x, _):
+            y = fno_mod.apply_fno(params, cfg, x, path=path or cfg.path,
+                                  variant=variant)
+            nxt = (jnp.concatenate([y, x[:, cfg.out_channels:]], axis=1)
+                   if keep else y)
+            return nxt, None
+
+        xk, _ = jax.lax.scan(body, x0, None, length=steps)
+        return xk[:, :cfg.out_channels]
+    return fno_rollout_step
 
 
 def batch_block(cfg: FNOConfig) -> int:
@@ -89,20 +143,33 @@ class FNOServer:
                  path: Optional[str] = None, variant: str = "full",
                  max_batch: int = 64, quantum: Optional[int] = None):
         self.cfg, self.params, self.ctx = cfg, params, ctx
-        q = quantum or batch_block(cfg)
+        # The quantum is validated against the TUNED plan's batch block
+        # (serve_quantum): an explicit quantum that is not a multiple of
+        # the tuned bb would misalign the whole ladder with the kernel
+        # grid — a retune can therefore never silently break it.
+        q = serve_quantum(cfg, quantum)
         if ctx is not None:
             for a in ctx.batch_axes:  # buckets must split across DP shards
                 q *= ctx.mesh.shape.get(a, 1)
         self.buckets = bucket_sizes(max_batch, quantum=q)
         base = make_fno_serve_step(cfg, path=path, variant=variant)
+        roll = make_fno_rollout_step(cfg, path=path, variant=variant)
         if ctx is not None:
             def step_fn(params, batch):
                 with shd.sharding_context(ctx):
                     return base(params, batch)
+
+            def rollout_step_fn(params, batch, *, steps):
+                with shd.sharding_context(ctx):
+                    return roll(params, batch, steps=steps)
         else:
-            step_fn = base
+            step_fn, rollout_step_fn = base, roll
         self.step_fn = step_fn
+        # Un-jitted, exposed for trace guards: a K-step rollout must trace
+        # exactly num_layers pallas_calls regardless of K (lint_rollout).
+        self.rollout_step_fn = rollout_step_fn
         self._step = jax.jit(step_fn)
+        self._rollout = jax.jit(rollout_step_fn, static_argnames=("steps",))
         self.stats = {"requests": 0, "samples": 0, "padded": 0}
 
     def collective_plan(self) -> Dict[str, object]:
@@ -148,12 +215,23 @@ class FNOServer:
         xp, m = pad_to_bucket(x, b)
         return self._step(params, {"x": xp})[:m]
 
-    def __call__(self, x: jax.Array) -> jax.Array:
+    def _bucketed(self, xp: jax.Array, rollout_steps: int) -> jax.Array:
+        if rollout_steps == 1:
+            return self._step(self.params, {"x": xp})
+        return self._rollout(self.params, {"x": xp}, steps=rollout_steps)
+
+    def __call__(self, x: jax.Array, rollout_steps: int = 1) -> jax.Array:
         """Serve one request batch x [n, C_in, *spatial] -> [n, C_out, …].
 
-        Oversize batches are chunked at the largest bucket; the tail chunk
-        pads up to its own bucket; an empty batch returns an empty output
-        without touching the step."""
+        ``rollout_steps > 1`` runs the device-resident autoregressive
+        rollout (one lax.scan — the carry never leaves HBM) and returns
+        the FINAL step's prediction; the jit cache keys on (bucket,
+        steps). Oversize batches are chunked at the largest bucket; the
+        tail chunk pads up to its own bucket; an empty batch returns an
+        empty output without touching the step."""
+        if rollout_steps < 1:
+            raise ValueError(f"rollout_steps must be >= 1, "
+                             f"got {rollout_steps}")
         n = x.shape[0]
         if n == 0:
             return jnp.zeros(
@@ -165,7 +243,7 @@ class FNOServer:
             chunk = x[s:s + top]
             b = pick_bucket(chunk.shape[0], self.buckets)
             xp, m = pad_to_bucket(chunk, b)
-            y = self._step(self.params, {"x": xp})
+            y = self._bucketed(xp, rollout_steps)
             self.stats["padded"] += b - m
             ys.append(y[:m])
         self.stats["requests"] += 1

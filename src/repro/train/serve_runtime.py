@@ -174,10 +174,13 @@ class ResilientServer:
             np.float32)
 
     # -- admission ----------------------------------------------------------
-    def submit(self, x) -> int:
+    def submit(self, x, rollout_steps: int = 1) -> int:
         """Admit one request batch; returns its request index. Raises
         ``RequestRejected`` (and counts the shed) when the bounded queue
-        is full — load is shed explicitly, never buffered unboundedly."""
+        is full — load is shed explicitly, never buffered unboundedly.
+        ``rollout_steps > 1`` asks for the device-resident autoregressive
+        rollout (``serve_fno_step.make_fno_rollout_step``) — the guarded
+        path and the degradation ladder apply to the whole trajectory."""
         if len(self._pending) >= self.queue_limit:
             self.stats["shed"] += 1
             raise RequestRejected(
@@ -185,7 +188,7 @@ class ResilientServer:
                 f"request shed")
         idx = self._req_idx
         self._req_idx += 1
-        self._pending.append((idx, x))
+        self._pending.append((idx, x, rollout_steps))
         self.stats["accepted"] += 1
         return idx
 
@@ -195,8 +198,8 @@ class ResilientServer:
         out = []
         try:
             while self._pending:
-                idx, x = self._pending[0]
-                y = self._serve_one(idx, x)
+                idx, x, steps = self._pending[0]
+                y = self._serve_one(idx, x, steps)
                 self._pending.popleft()
                 self.stats["served"] += 1
                 out.append(y)
@@ -204,8 +207,8 @@ class ResilientServer:
             self.health_sweep()
         return out
 
-    def __call__(self, x) -> np.ndarray:
-        self.submit(x)
+    def __call__(self, x, rollout_steps: int = 1) -> np.ndarray:
+        self.submit(x, rollout_steps)
         return self.drain()[-1]
 
     # -- health -------------------------------------------------------------
@@ -253,7 +256,7 @@ class ResilientServer:
                 f"no healthy replica (pool: {self.pool.states()})")
         return r
 
-    def _serve_one(self, idx: int, x) -> np.ndarray:
+    def _serve_one(self, idx: int, x, rollout_steps: int = 1) -> np.ndarray:
         deadline = (None if self.deadline_s is None
                     else time.monotonic() + self.deadline_s)
         attempt = 0
@@ -285,7 +288,7 @@ class ResilientServer:
                 # Host-materialize inside the guard: deferred kernel
                 # errors surface here, and the finite check needs the
                 # bytes anyway.
-                y = np.asarray(self.primary(x))
+                y = np.asarray(self.primary(x, rollout_steps))
                 if any(f.kind == "nan" for f in planned):
                     y = flt.poison_output(y)
                 if not np.isfinite(y).all():
@@ -307,7 +310,7 @@ class ResilientServer:
             except Exception as e:  # kernel fault / NaN → degrade
                 self.pool.quarantine(replica)
                 self.stats["quarantined"] += 1
-                y = np.asarray(self.fallback(x))
+                y = np.asarray(self.fallback(x, rollout_steps))
                 if np.isfinite(y).all():
                     self.stats["degraded"] += 1
                     return y

@@ -18,12 +18,14 @@ This package owns that decision end to end:
 """
 from repro.tuning.plans import (BlockPlan, LAUNCH_KINDS, LaunchPlans,
                                 plan_key, shape_class)
-from repro.tuning.resolve import resolve_block_plan, resolve_launch_plans
+from repro.tuning.resolve import (resolve_block_plan, resolve_launch_plans,
+                                  serve_quantum)
 from repro.tuning.store import (DEFAULT_CACHE_PATH, check_tuning_cache,
                                 load_cache, save_cache)
 
 __all__ = [
     "BlockPlan", "LAUNCH_KINDS", "LaunchPlans", "plan_key", "shape_class",
-    "resolve_block_plan", "resolve_launch_plans", "DEFAULT_CACHE_PATH",
+    "resolve_block_plan", "resolve_launch_plans", "serve_quantum",
+    "DEFAULT_CACHE_PATH",
     "check_tuning_cache", "load_cache", "save_cache",
 ]

@@ -83,6 +83,32 @@ def resolve_launch_plans(rank: int, *, hidden: int, out: Optional[int] = None,
                        wgrad=one("wgrad"))
 
 
+def serve_quantum(cfg_or_shapes, quantum: Optional[int] = None, *,
+                  policy=None, cache_path: Optional[str] = None) -> int:
+    """The serving bucket quantum, validated against the TUNED plan.
+
+    The bucket ladder (``train/serve_fno_step.bucket_sizes``) must stay a
+    multiple of the fused engine's batch block or every bucketed launch
+    pads internally — and the batch block is whatever the tuned cache says
+    for ``block_fwd``, not the static default. ``quantum=None`` returns
+    the tuned ``bb`` itself; an explicit quantum (e.g. already multiplied
+    by the DP shard count) is accepted only when it is a positive multiple
+    of the tuned ``bb``, so a retune that changes the batch block can
+    never silently misalign an explicitly-quantized ladder.
+    """
+    bb = resolve_block_plan(cfg_or_shapes, "block_fwd", policy=policy,
+                            cache_path=cache_path).bb
+    if quantum is None:
+        return bb
+    if quantum < 1 or quantum % bb != 0:
+        raise ValueError(
+            f"serve quantum {quantum} is not a positive multiple of the "
+            f"tuned batch block bb={bb} (block_fwd plan) — the bucket "
+            f"ladder would misalign with the kernel grid; use a multiple "
+            f"of {bb} or pass quantum=None to take the tuned block")
+    return quantum
+
+
 def resolve_block_plan(cfg_or_shapes, launch: str = "block_fwd", *,
                        policy=None, override: Optional[Sequence[int]] = None,
                        cache_path: Optional[str] = None) -> BlockPlan:

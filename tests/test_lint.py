@@ -242,6 +242,72 @@ def test_resilient_serve_lint_clean_and_mutation():
             in fs[0].message)
 
 
+def _rollout_fixture():
+    """Reduced fno2d fused server with zero params (tracing only — no
+    kernels execute) plus a bucket-sized batch, for the rollout lints."""
+    import dataclasses
+
+    from repro.core import fno as fno_mod
+    from repro.train import serve_fno_step as sfs
+
+    cfg = dataclasses.replace(get_config("fno2d", reduced=True),
+                              path="pallas", fuse_block=True)
+    params = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda: fno_mod.init_fno(jax.random.PRNGKey(0),
+                                                cfg)))
+    server = sfs.FNOServer(cfg, params, max_batch=2)
+    xb = jnp.zeros((server.buckets[0], cfg.in_channels)
+                   + tuple(cfg.spatial), jnp.float32)
+    return cfg, server, (params, {"x": xb})
+
+
+def test_rollout_lint_clean_and_depth_invariant():
+    # ISSUE 10: the rollout trace contract. The device-resident K-step
+    # rollout is ONE lax.scan whose body traces once, so the pallas_call
+    # count stays exactly num_layers for ANY depth — pinned here for the
+    # acceptance K in {1, 4} via the sweep entry point AND the raw
+    # checker. ``steps`` must be bound statically (functools.partial)
+    # before tracing: a traced depth would abstract the scan length.
+    import functools
+
+    fs = jaxpr_lint.lint_rollout(archs=("fno2d",), dtypes=("f32",),
+                                 ks=(1, 4))
+    assert fs == [], fs
+
+    cfg, server, args = _rollout_fixture()
+    for k in (1, 4):
+        fn = functools.partial(server.rollout_step_fn, steps=k)
+        assert jaxpr_lint.check_pallas_count(
+            fn, args, cfg.num_layers, target=f"rollout K={k}") == []
+        assert jaxpr_lint.check_cast_ownership(
+            fn, args, cfg.precision, target=f"rollout K={k}") == []
+
+
+def test_mutation_unrolled_rollout_fires_count_checker():
+    # The mutant the contract exists to kill: a python-loop rollout
+    # re-traces the whole network every step, so K=4 launches
+    # K * num_layers kernels (and recompiles per depth). The count
+    # checker must fire with the exact inflated count.
+    from repro.core import fno as fno_mod
+
+    cfg, _, args = _rollout_fixture()
+
+    def unrolled(p, batch):  # the staged loop masquerading as a rollout
+        x = batch["x"]
+        for _ in range(4):
+            y = fno_mod.apply_fno(p, cfg, x, path="pallas")
+            x = jnp.concatenate([y, x[:, cfg.out_channels:].astype(y.dtype)],
+                                axis=1)
+        return x[:, :cfg.out_channels]
+
+    fs = jaxpr_lint.check_pallas_count(unrolled, args, cfg.num_layers,
+                                       target="unrolled rollout")
+    assert len(fs) == 1 and fs[0].checker == "pallas-count"
+    assert (f"traced {4 * cfg.num_layers} pallas_calls, want exactly "
+            f"{cfg.num_layers}" in fs[0].message)
+
+
 def test_mutation_psum_layout_fails_scatter_budget(subproc):
     # End-to-end mutation on the REAL serve path: hold the legacy psum
     # layout to the scattered layout's budget — both messages fire

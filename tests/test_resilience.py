@@ -340,6 +340,62 @@ def test_standard_chaos_plan_end_to_end(serve_setup):
     assert [f.kind for f in plan.pending()] == ["corrupt_ckpt"]
 
 
+@pytest.mark.parametrize("name", sorted(flt.canned_chaos_plans()))
+def test_stat_keys_conserve_under_every_canned_plan(serve_setup, name):
+    # ISSUE 10 satellite: whatever a canned chaos plan injects, the
+    # counter ledger must balance — no request may vanish from the stats,
+    # and the fault-class counters must match the plan EXACTLY (counts
+    # are injected deterministically, so anything else is an accounting
+    # bug, not noise).
+    _, _, x, _ = serve_setup
+    plan = flt.canned_chaos_plans()[name]
+    planned_degrade = plan.count(kinds=("kernel", "nan"))
+    planned_kill = plan.count(kinds=("kill",))
+    rs = _server(serve_setup, plan)
+    offered = 5
+    for _ in range(offered):
+        rs.submit(x)
+    ys = rs.drain()
+    s = rs.stats
+    assert set(s) == set(srt.ResilientServer.STAT_KEYS)
+    # admission ledger: every offered request is accepted (no shed here)
+    # and every accepted request reached exactly one terminal outcome.
+    assert s["accepted"] == offered and s["shed"] == 0
+    assert s["served"] + s["deadline_exceeded"] == s["accepted"]
+    assert len(ys) == offered and all(np.isfinite(y).all() for y in ys)
+    # fault-class counters match the plan exactly.
+    assert s["degraded"] == planned_degrade, (name, dict(s))
+    assert s["killed"] == planned_kill, (name, dict(s))
+    assert s["failovers"] == planned_kill  # every kill failed over
+    # quarantine is a cycle: drain's health sweep reinstates whatever the
+    # faults quarantined, so the pool ends with no quarantined replica
+    # and the two counters agree.
+    assert s["quarantined"] == s["reinstated"], (name, dict(s))
+    assert rs.pool.states()["quarantined"] == 0
+    assert rs.pool.states()["dead"] == planned_kill
+    # nothing in these plans touches checkpoints in-band.
+    assert s["reloads"] == 0 and s["rollbacks"] == 0
+
+
+def test_stat_keys_conserve_under_forced_shed(serve_setup):
+    # The shed path joins the same ledger: offered == accepted + shed,
+    # with the exact shed count forced by the admission bound.
+    _, _, x, _ = serve_setup
+    rs = _server(serve_setup, queue_limit=3)
+    offered, shed = 5, 2
+    for i in range(offered):
+        if i < 3:
+            rs.submit(x)
+        else:
+            with pytest.raises(srt.RequestRejected):
+                rs.submit(x)
+    ys = rs.drain()
+    s = rs.stats
+    assert s["accepted"] + s["shed"] == offered
+    assert s["shed"] == shed
+    assert s["served"] == s["accepted"] == len(ys) == 3
+
+
 # ---------------------------------------------------------------------------
 # hardened trainer: NaN budget, ckpt save retry, watchdog restart
 # ---------------------------------------------------------------------------

@@ -1,0 +1,160 @@
+"""Device-resident multi-step rollout (ISSUE 10, docs/DESIGN.md §10).
+
+``make_fno_rollout_step`` runs a K-step autoregressive trajectory inside
+one jitted ``lax.scan`` without the carry ever leaving HBM. These tests
+pin its math: the scan must equal a STAGED per-step loop (one apply_fno
+call per step, output fed back by hand) for every rank and both
+precision presets, the pallas rollout must match the XLA oracle, and the
+fno2d channel-feedback rule (prediction replaces the solution channel,
+coordinate channels persist) must hold. The companion trace contract —
+exactly ``num_layers`` pallas_calls regardless of K — lives in
+tests/test_lint.py and ``analysis.jaxpr_lint.lint_rollout``.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.fno import with_precision
+from repro.core import fno as fno_mod
+from repro.train.serve_fno_step import make_fno_rollout_step
+
+PARITY_TOL = 2e-4  # same contract as the serving/resilience suites
+
+
+def _cfg(arch, prec="f32"):
+    cfg = dataclasses.replace(get_config(arch, reduced=True),
+                              path="pallas", fuse_block=True)
+    return with_precision(cfg, prec) if prec != "f32" else cfg
+
+
+def _setup(cfg, batch=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = fno_mod.init_fno(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (batch, cfg.in_channels) + tuple(cfg.spatial))
+    return params, x
+
+
+def staged_rollout(params, cfg, x, steps, path):
+    """The oracle: K separate apply_fno calls with the feedback done by
+    hand between steps — what a serving loop WITHOUT the device-resident
+    scan would compute (each step round-tripping host/HBM)."""
+    x = jnp.asarray(x, jnp.dtype(cfg.precision.compute_dtype))
+    keep = cfg.in_channels - cfg.out_channels
+    for _ in range(steps):
+        y = fno_mod.apply_fno(params, cfg, x, path=path)
+        x = jnp.concatenate([y, x[:, cfg.out_channels:]], 1) if keep else y
+    return x[:, :cfg.out_channels]
+
+
+@pytest.mark.parametrize("prec", ["f32", "bf16"])
+@pytest.mark.parametrize("arch", ["fno1d", "fno2d", "fno3d"])
+def test_rollout_matches_staged_loop(arch, prec):
+    """K-step scan rollout == the staged per-step loop at the SAME path
+    and precision, every rank x both presets. Same ops in the same order,
+    so this holds to fp tolerance even under bf16."""
+    cfg = _cfg(arch, prec)
+    params, x = _setup(cfg)
+    roll = jax.jit(make_fno_rollout_step(cfg),
+                   static_argnames=("steps",))
+    for steps in (1, 3):
+        got = np.asarray(roll(params, {"x": x}, steps=steps),
+                         np.float32)
+        want = np.asarray(staged_rollout(params, cfg, x, steps, "pallas"),
+                          np.float32)
+        assert got.shape == (x.shape[0], cfg.out_channels) + tuple(
+            cfg.spatial)
+        np.testing.assert_allclose(got, want, rtol=0, atol=PARITY_TOL)
+        assert np.isfinite(got).all()
+
+
+@pytest.mark.parametrize("arch", ["fno1d", "fno2d", "fno3d"])
+def test_rollout_pallas_matches_xla_oracle_f32(arch):
+    """The fused pallas rollout vs a staged XLA rollout: per-step kernel
+    parity (2e-4) must not compound past the contract over K=3 steps on
+    the reduced problems."""
+    cfg = _cfg(arch)
+    params, x = _setup(cfg)
+    roll = jax.jit(make_fno_rollout_step(cfg),
+                   static_argnames=("steps",))
+    got = np.asarray(roll(params, {"x": x}, steps=3))
+    want = np.asarray(staged_rollout(params, cfg, x, 3, "xla"))
+    np.testing.assert_allclose(got, want, rtol=0, atol=PARITY_TOL)
+
+
+def test_rollout_channel_feedback_preserves_conditioning():
+    """fno2d serves (a, x, y) -> u: across rollout steps the prediction
+    replaces channel 0 while the coordinate-grid channels 1..2 persist
+    verbatim. Pin that by showing the K=2 rollout equals a hand-built
+    step whose input is [u_1, coords] exactly."""
+    cfg = _cfg("fno2d")
+    assert cfg.in_channels == 3 and cfg.out_channels == 1
+    params, x = _setup(cfg)
+    roll = jax.jit(make_fno_rollout_step(cfg),
+                   static_argnames=("steps",))
+    u1 = fno_mod.apply_fno(params, cfg, x, path="pallas")
+    x2 = jnp.concatenate([u1, x[:, 1:].astype(u1.dtype)], axis=1)
+    want = np.asarray(fno_mod.apply_fno(params, cfg, x2, path="pallas"))
+    got = np.asarray(roll(params, {"x": x}, steps=2))
+    np.testing.assert_allclose(got, want, rtol=0, atol=PARITY_TOL)
+    # ...and feeding DIFFERENT conditioning must change the answer (the
+    # coords really flow through, they are not dropped by the carry).
+    x_shift = x.at[:, 1:].add(0.5)
+    other = np.asarray(roll(params, {"x": x_shift}, steps=2))
+    assert not np.allclose(got, other, atol=1e-3)
+
+
+def test_rollout_depth_changes_answer():
+    """Each extra step applies the operator again — K=1, 2, 3 must give
+    three distinct trajectories (the scan really iterates)."""
+    cfg = _cfg("fno2d")
+    params, x = _setup(cfg)
+    roll = jax.jit(make_fno_rollout_step(cfg),
+                   static_argnames=("steps",))
+    outs = [np.asarray(roll(params, {"x": x}, steps=k)) for k in (1, 2, 3)]
+    for a, b in zip(outs, outs[1:]):
+        assert not np.allclose(a, b, atol=1e-5)
+
+
+def test_rollout_output_dtype_is_compute_dtype():
+    """The carry is cast ONCE up front (policy-owned cast), so the K-step
+    output dtype matches the single-step serve output for both presets."""
+    for prec, want in (("f32", jnp.float32), ("bf16", jnp.bfloat16)):
+        cfg = _cfg("fno2d", prec)
+        params, x = _setup(cfg)
+        roll = make_fno_rollout_step(cfg)
+        y = roll(params, {"x": x}, steps=2)
+        assert y.dtype == jnp.dtype(want), (prec, y.dtype)
+
+
+def test_rollout_rejects_widening_head():
+    """out_channels > in_channels has no feedback rule (the prediction
+    cannot seed the next input) — constructing the rollout must fail
+    loudly, not produce a silently wrong concat."""
+    cfg = dataclasses.replace(get_config("fno1d", reduced=True),
+                              out_channels=2)
+    assert cfg.out_channels > cfg.in_channels
+    with pytest.raises(ValueError, match="out_channels <= in_channels"):
+        make_fno_rollout_step(cfg)
+
+
+def test_rollout_steps_is_static():
+    """``steps`` is a trace-time constant (static_argnames under jit, a
+    functools.partial bind under make_jaxpr) — two depths are two cache
+    entries, both correct."""
+    cfg = _cfg("fno1d")
+    params, x = _setup(cfg)
+    roll = jax.jit(make_fno_rollout_step(cfg),
+                   static_argnames=("steps",))
+    a = np.asarray(roll(params, {"x": x}, steps=1))
+    b = np.asarray(roll(params, {"x": x}, steps=2))
+    assert a.shape == b.shape and not np.array_equal(a, b)
+    # and the partial-bind tracing idiom the lint/driver contract uses
+    fn = functools.partial(make_fno_rollout_step(cfg), steps=2)
+    jaxpr = jax.make_jaxpr(fn)(params, {"x": x})
+    assert jaxpr.jaxpr is not None

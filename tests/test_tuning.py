@@ -158,6 +158,59 @@ def test_serve_batch_block_routes_through_resolver():
         assert batch_block(cfg) == resolve_block_plan(cfg, "block_fwd").bb
 
 
+def test_serve_quantum_validates_against_tuned_plan():
+    # ISSUE 10: the bucket-ladder quantum must stay a multiple of the
+    # TUNED plan's batch block, not the static default — a retune that
+    # changes bb can never silently misalign an explicit ladder.
+    from repro.tuning import serve_quantum
+
+    for arch in FNO_IDS:
+        cfg = get_config(arch, reduced=True)
+        bb = resolve_block_plan(cfg, "block_fwd").bb
+        assert serve_quantum(cfg) == bb  # None -> the tuned bb itself
+        assert serve_quantum(cfg, bb) == bb
+        assert serve_quantum(cfg, 3 * bb) == 3 * bb  # e.g. bb x dp shards
+        for bad in (bb + 1, -bb, 0):
+            with pytest.raises(ValueError, match="tuned batch block"):
+                serve_quantum(cfg, bad)
+
+
+def test_serve_quantum_follows_block_plan_override():
+    # A pinned cfg-level launch plan changes the resolved bb, and the
+    # quantum validation must follow it (the override wins over cache).
+    from repro.tuning import serve_quantum
+
+    cfg = get_config("fno2d", reduced=True)
+    base = resolve_block_plan(cfg, "block_fwd").bb
+    pinned = with_block_plan(cfg, 2 * base, 0, 0)
+    assert resolve_block_plan(pinned, "block_fwd").bb == 2 * base
+    assert serve_quantum(pinned) == 2 * base
+    with pytest.raises(ValueError, match="tuned batch block"):
+        serve_quantum(pinned, base)  # a multiple of the OLD bb only
+
+
+def test_fno_server_rejects_misaligned_quantum():
+    # The server constructor routes through serve_quantum, so a bad
+    # explicit quantum fails loudly at build time — not as internal
+    # padding on the first request.
+    from repro.core import fno as fno_mod
+    from repro.train.serve_fno_step import FNOServer
+    import dataclasses as dc
+
+    cfg = dc.replace(get_config("fno2d", reduced=True), path="pallas",
+                     fuse_block=True)
+    params = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda: fno_mod.init_fno(jax.random.PRNGKey(0),
+                                                cfg)))
+    bb = resolve_block_plan(cfg, "block_fwd").bb
+    with pytest.raises(ValueError, match="tuned batch block"):
+        FNOServer(cfg, params, max_batch=2 * bb, quantum=bb + 1)
+    server = FNOServer(cfg, params, max_batch=2 * bb, quantum=bb)
+    assert server.buckets[0] == bb  # ladder starts at the tuned quantum
+    assert all(b % bb == 0 for b in server.buckets)
+
+
 # ---------------------------------------------------------------------------
 # feasibility: every runnable cell resolves budget-fitting plans
 # ---------------------------------------------------------------------------
